@@ -1,0 +1,51 @@
+"""Kernel-layer micro-benchmarks.
+
+On this CPU host the Pallas kernels only run in interpret mode (Python
+semantics — not a performance number), so wall-time rows time the jnp
+reference path; kernel rows are single-call interpret sanity timings,
+labelled as such.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sort import radix_argsort_u32
+from repro.kernels import ref
+
+
+def _t(fn, reps=3):
+    out = fn()
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    s = 1024 if quick else 4096
+    q = jnp.asarray(rng.standard_normal((1, s, 4, 64)), jnp.float32)
+    qb = q.transpose(0, 2, 1, 3).reshape(4, s, 64)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    f = jax.jit(lambda a: ref.flash_attention_ref(a, a, a, pos, pos,
+                                                  causal=True))
+    rows.append((f"kernels.attention_ref_s{s}", _t(lambda: f(qb)) * 1e6,
+                 s))
+    n = 65_536 if quick else 262_144
+    keys = jnp.asarray(rng.integers(0, 2 ** 32, n, dtype=np.uint32))
+    g = jax.jit(radix_argsort_u32)
+    rows.append((f"kernels.radix_sort_n{n}", _t(lambda: g(keys)) * 1e6,
+                 n))
+    m1 = jnp.asarray(rng.integers(0, 2 ** 32, (n // 16, 2),
+                                  dtype=np.uint32))
+    h = jax.jit(lambda a, b: jnp.any(jnp.bitwise_and(a, b) != 0, axis=1))
+    rows.append((f"kernels.bitmap_ref_n{n//16}",
+                 _t(lambda: h(m1, m1)) * 1e6, n // 16))
+    return rows

@@ -1,0 +1,164 @@
+"""Roofline table generator: reads the dry-run artifacts and emits the
+§Roofline markdown (one row per arch × shape × mesh) plus summary rows
+for benchmarks.run.
+
+Memory term: the HLO-parsed byte count from the *CPU-compiled* module
+over-counts TPU HBM traffic (the CPU backend fuses far less), so the
+table's t_memory uses an analytic central model — parameter traffic
+(FSDP re-gathers per microbatch × passes) + activation traffic (remat:
+fwd + recompute + bwd) + cache traffic for decode — with the HLO number
+kept as the upper bound column.
+"""
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "experiments",
+                 "artifacts"))
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def analytic_memory_bytes(rec: Dict) -> Optional[float]:
+    """Per-device-per-step HBM traffic central estimate."""
+    try:
+        from repro.configs import ARCHS, SHAPES
+    except ImportError:
+        return None
+    if rec.get("arch") not in ARCHS or rec.get("shape") not in SHAPES:
+        return None
+    cfg = ARCHS[rec["arch"]].padded_for_mesh(16)
+    shape = SHAPES[rec["shape"]]
+    chips = rec.get("chips", 256)
+    tp = 16
+    dp = chips // tp
+    p_bytes = cfg.n_params() * 4.0 / tp     # full params per device (f32)
+    b_loc = max(shape.global_batch // dp, 1)
+    act_dtype = 2.0
+    micro = max(rec.get("micro_batches", 1) or 1, 1)
+    # ~20 layer-level tensors of (B,S,d) per block is a good central
+    # estimate for transformer/SSD blocks
+    act = (20.0 * cfg.n_layers * b_loc * shape.seq_len * cfg.d_model *
+           act_dtype)
+    if shape.kind == "train":
+        # params read fwd+recompute+bwd per microbatch; grads+opt f32
+        traffic = 3.0 * micro * p_bytes + 3.0 * act + \
+            3.0 * cfg.n_params() * 4.0 / chips * 4
+    elif shape.kind == "prefill":
+        traffic = p_bytes + act / 3.0
+    else:  # decode: params + full cache read per token
+        cache = 0.0
+        if cfg.n_kv_heads and cfg.attn_type == "gqa":
+            hd = cfg.resolved_head_dim
+            slots = min(shape.seq_len, cfg.sliding_window or
+                        shape.seq_len)
+            glob = len(cfg.global_layers) if cfg.sliding_window else \
+                cfg.n_layers
+            win = cfg.n_layers - glob
+            cache = 2 * act_dtype * cfg.n_kv_heads * hd * (
+                glob * shape.seq_len + win * slots)
+        if cfg.attn_type == "mla":
+            cache = act_dtype * cfg.n_layers * shape.seq_len * (
+                cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        if cfg.has_ssm:
+            cache += (4.0 * cfg.n_layers * cfg.ssm_nheads *
+                      cfg.ssm_headdim * cfg.ssm_state)
+        # caches with >=4096 slots are 'model'-sharded (launch/specs.py)
+        cache_div = tp if shape.seq_len >= 4096 else 1
+        traffic = p_bytes + cache * b_loc / cache_div
+    return float(traffic)
+
+
+def load_records(outdir: str = ARTIFACTS) -> List[Dict]:
+    recs = []
+    if not os.path.isdir(outdir):
+        return recs
+    for f in sorted(os.listdir(outdir)):
+        if f.endswith(".json"):
+            with open(os.path.join(outdir, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def terms(r: Dict) -> Optional[Dict]:
+    """Roofline terms with the analytic memory model (falls back to the
+    HLO number for non-arch cells like lgrass)."""
+    if "skipped" in r:
+        return None
+    tc = r.get("t_compute_s", 0.0)
+    tl = r.get("t_collective_s", 0.0)
+    amem = analytic_memory_bytes(r)
+    tm = (amem / HBM_BW) if amem else r.get("t_memory_s", 0.0)
+    dom = max((("compute", tc), ("memory", tm), ("collective", tl)),
+              key=lambda kv: kv[1])[0]
+    frac = max(tc, 1e-30) / max(tc, tm, tl)
+    return dict(t_compute=tc, t_memory=tm, t_collective=tl,
+                t_memory_hlo_upper=r.get("t_memory_s", 0.0),
+                dominant=dom, roofline_fraction=frac)
+
+
+def markdown_table(recs: List[Dict], mesh: Optional[str] = None) -> str:
+    lines = [
+        "| cell | kind | t_compute | t_memory (analytic) | t_mem HLO-UB |"
+        " t_collective | dominant | roofline-frac | useful-FLOP |"
+        " HBM est |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(
+                f"| {r['cell']} | — | — | — | — | — | SKIP | — | — |"
+                f" {r['skipped'][:48]} |")
+            continue
+        t = terms(r)
+        m = r.get("memory", {})
+        hbm = m.get("hbm_estimate_bytes", m.get("temp_bytes", 0)) / 2 ** 30
+        lines.append(
+            "| {cell} | {kind} | {tc} | {tm} | {tmu} | {tl} | {dom} |"
+            " {rf} | {uf} | {hbm:.1f}GiB |".format(
+                cell=r["cell"], kind=r.get("kind", "?"),
+                tc=_fmt_s(t["t_compute"]),
+                tm=_fmt_s(t["t_memory"]),
+                tmu=_fmt_s(t["t_memory_hlo_upper"]),
+                tl=_fmt_s(t["t_collective"]),
+                dom=t["dominant"],
+                rf=f"{t['roofline_fraction']:.3f}",
+                uf=f"{r.get('useful_flop_ratio', 0):.2f}",
+                hbm=hbm))
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    rows = []
+    n_ok = sum(1 for r in recs if "skipped" not in r)
+    n_skip = sum(1 for r in recs if "skipped" in r)
+    rows.append(("roofline.cells_compiled", 0.0, n_ok))
+    rows.append(("roofline.cells_skipped_by_rule", 0.0, n_skip))
+    for r in recs:
+        t = terms(r)
+        if t is None:
+            continue
+        dom_t = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        rows.append((f"roofline.{r['cell']}.dominant_term_s",
+                     dom_t * 1e6, t["dominant"]))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(markdown_table(recs))

@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table3,table2,fig5,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, fig5_linearity, roofline,
+                            table2_breakdown, table3_execution_time)
+
+    suites = {
+        "table3": table3_execution_time.run,
+        "table2": table2_breakdown.run,
+        "fig5": fig5_linearity.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        try:
+            rows = suites[name](quick=args.quick)
+        except Exception as e:  # report but keep the suite going
+            print(f"{name}.ERROR,0,{e!r}", file=sys.stdout)
+            continue
+        for row in rows:
+            n, us, derived = row
+            print(f"{n},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table 2 analogue: per-subroutine time breakdown of basic LGRASS
+(EFF/BFS, MST, LCA+RES, SORT, MARK) on an official-style case."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfs import bfs, effective_weights, select_root
+from repro.core.graph import powergrid_like_graph
+from repro.core.lca import build_lifting, lca_with_shortcut
+from repro.core.marking import (build_group_layout, group_keys,
+                                phase1_basic)
+from repro.core.mst import boruvka_mst
+from repro.core.resistance import (criticality, node_parent_inv_w,
+                                   root_path_sums)
+from repro.core.sort import sort_f32_desc_stable
+
+
+def _t(fn):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+def run(quick: bool = False):
+    side = 24 if quick else 64
+    g = powergrid_like_graph(side, 0.25, seed=3)
+    u = jnp.asarray(g.u, jnp.int32)
+    v = jnp.asarray(g.v, jnp.int32)
+    w = jnp.asarray(g.w, jnp.float32)
+    n = g.n
+    rows = []
+
+    t, root = _t(lambda: select_root(u, v, n))
+    t_eff, (depth_g, _) = _t(lambda: bfs(u, v, n, root))
+    t2, eff = _t(lambda: effective_weights(u, v, w, depth_g, n))
+    rows.append((f"table2.EFF_n{n}", (t + t_eff + t2) * 1e6, g.m))
+
+    t_sort1, perm = _t(lambda: sort_f32_desc_stable(eff))
+    rank = jnp.zeros_like(perm).at[perm].set(
+        jnp.arange(perm.shape[0], dtype=jnp.int32))
+    t_mst, tree = _t(lambda: boruvka_mst(u, v, rank, n))
+    rows.append((f"table2.MST_n{n}", (t_sort1 + t_mst) * 1e6, g.m))
+
+    _, (depth_t, parent_t) = _t(lambda: bfs(u, v, n, root, edge_mask=tree))
+    t_lift, tbl = _t(lambda: build_lifting(parent_t, depth_t, n))
+    t_lca, elca = _t(lambda: lca_with_shortcut(tbl, root, u, v))
+    rows.append((f"table2.LCA_n{n}", (t_lift + t_lca) * 1e6, g.m))
+
+    inv_w = node_parent_inv_w(u, v, w, tree, parent_t, n)
+    t_res, r = _t(lambda: root_path_sums(tbl, inv_w))
+    t_crit, crit = _t(lambda: criticality(tbl, r, u, v, w, elca))
+    rows.append((f"table2.RES_n{n}", (t_res + t_crit) * 1e6, g.m))
+
+    hi, lo, crossing = group_keys(tbl, root, u, v, elca, ~tree)
+    t_sort, layout = _t(lambda: build_group_layout(crit, hi, lo, crossing))
+    rows.append((f"table2.SORT_n{n}", t_sort * 1e6, g.m))
+
+    su, sv = u[layout.perm], v[layout.perm]
+    beta = jnp.maximum(jnp.minimum(depth_t[u], depth_t[v])
+                       - depth_t[elca], 1).astype(jnp.int32)
+    sbeta = beta[layout.perm]
+    t_mark, _ = _t(lambda: phase1_basic(tbl, su, sv, sbeta, layout, 8))
+    rows.append((f"table2.MARK_n{n}", t_mark * 1e6, g.m))
+    return rows

@@ -1,0 +1,69 @@
+"""Beyond-paper demo: LGRASS as a long-context attention-mask planner.
+
+Builds a block graph over a long sequence, runs the exact LGRASS pipeline
+on it, and compares block-sparse attention (LGRASS mask) against dense
+attention — mask density and output error on the locality-structured part.
+
+    PYTHONPATH=src python examples/sparse_attention.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.attention_graph import (block_sparse_attention,
+                                          plan_block_mask)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, S, H, D = 1, 1024, 4, 64
+    block = 32
+    nb = S // block
+
+    # token stream with locality + a few long-range dependencies
+    x = rng.standard_normal((B, S, H * D)).astype(np.float32)
+    x[:, 700:732] += x[:, 100:132] * 2.0  # long-range copy structure
+
+    feats = x[0].reshape(nb, block, -1).mean(1)
+    plan = plan_block_mask(feats, keep_frac=0.3, window=2)
+    density = plan.mask.sum() / (nb * (nb + 1) / 2)
+    print(f"{nb}x{nb} block mask: kept {plan.kept_edges}/{plan.total_edges}"
+          f" graph edges -> causal mask density {density:.2%}")
+
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    sparse = block_sparse_attention(q, k, v, jnp.asarray(plan.mask), block)
+
+    # how much of the *dense* attention probability mass the mask covers
+    scale = D ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    p_dense = jax.nn.softmax(jnp.where(causal, scores, -1e9), -1)
+    tok_mask = jnp.repeat(jnp.repeat(jnp.asarray(plan.mask), block, 0),
+                          block, 1) & causal
+    covered = float((p_dense * tok_mask[None, None]).sum() / p_dense.sum())
+    print(f"attention mass covered by LGRASS mask: {covered:.1%} "
+          f"at {density:.1%} of the compute")
+
+    # connectivity guarantee: the kept block graph (incl. spanning tree)
+    # is connected, so information can propagate between any two blocks
+    adj = plan.mask | plan.mask.T
+    seen = np.zeros(nb, bool)
+    seen[0] = True
+    frontier = [0]
+    while frontier:
+        nxt = []
+        for x in frontier:
+            for y in np.where(adj[x])[0]:
+                if not seen[y]:
+                    seen[y] = True
+                    nxt.append(int(y))
+        frontier = nxt
+    print(f"block graph connected (spanning-tree guarantee): "
+          f"{bool(seen.all())}")
+
+
+if __name__ == "__main__":
+    main()

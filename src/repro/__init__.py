@@ -1,0 +1,18 @@
+"""repro: LGRASS — Linear Graph Spectral Sparsification (IPCC-2022) as a
+production-grade JAX framework.
+
+Layout:
+    repro.core      — the paper's contribution: linear-time spectral
+                      sparsification (BFS / MST / LCA / resistance / radix
+                      sort / edge marking / recovery), pure JAX + host
+                      recovery tail, with a python oracle for fidelity.
+    repro.models    — LM-family model zoo (dense / GQA / MLA / MoE / SSM /
+                      hybrid / encoder) used by the multi-pod dry-run.
+    repro.kernels   — Pallas TPU kernels (flash attention, radix histogram,
+                      bitmap intersection) + jnp oracles.
+    repro.train     — training step / trainer with fault tolerance.
+    repro.serve     — prefill / decode with KV- and SSM-state caches.
+    repro.launch    — production mesh, dry-run driver, train/serve CLIs.
+"""
+
+__version__ = "0.1.0"

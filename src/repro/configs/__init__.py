@@ -1,0 +1,26 @@
+"""Config registry: --arch <id> resolution."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, cell_skip_reason
+
+from repro.configs.mamba2_370m import CONFIG as _mamba2
+from repro.configs.chameleon_34b import CONFIG as _chameleon
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.internlm2_20b import CONFIG as _internlm2
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.granite_moe_3b import CONFIG as _granite
+
+ARCHS = {c.name: c for c in [
+    _mamba2, _chameleon, _hymba, _starcoder2, _phi3,
+    _minicpm3, _internlm2, _hubert, _dbrx, _granite,
+]}
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_arch",
+           "cell_skip_reason"]

@@ -1,0 +1,23 @@
+# The paper's primary contribution: LGRASS linear graph spectral
+# sparsification, as a composable JAX module. Public API:
+from repro.core.graph import (
+    Graph,
+    official_case,
+    powergrid_like_graph,
+    random_connected_graph,
+)
+from repro.core.baseline import BaselineResult, baseline_sparsify, default_budget
+from repro.core.sparsify import SparsifyResult, lgrass_sparsify, phase1_device
+
+__all__ = [
+    "Graph",
+    "official_case",
+    "powergrid_like_graph",
+    "random_connected_graph",
+    "BaselineResult",
+    "baseline_sparsify",
+    "default_budget",
+    "SparsifyResult",
+    "lgrass_sparsify",
+    "phase1_device",
+]

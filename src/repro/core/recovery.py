@@ -1,0 +1,113 @@
+"""Recovery of non-crossing edges and their after-effects (Algorithm 6).
+
+Phase 1 (marking.py) resolves crossing edges per independent LCA group.
+Non-crossing edges, overflowed groups and the global budget cut are
+replayed here sequentially in global criticality order — exactly as the
+paper keeps Algorithm 6 a sequential tail even in parallel LGRASS
+(Fig. 1c). The replay reuses phase-1 decisions wherever they are provably
+final and re-derives them only where a *dirty* flag says an interaction
+outside phase 1's model occurred:
+
+  * an accepted non-crossing edge dirties every off-tree edge it covers
+    ("enforced"/"withdrawn" propagation, Alg. 6 lines 11-19);
+  * a crossing edge whose final decision flips w.r.t. phase 1 dirties the
+    later edges of its group (their phase-1 checks consulted a stale
+    accepted set);
+  * groups that overflowed the K-slot accept table are fully dirty.
+
+Dirty or non-crossing edges are decided by the exact ball-pair test
+against the accepted-so-far set, so the result equals the baseline greedy
+(tests assert bit-equality against baseline.py on random graphs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import _host as H
+
+
+def recover(
+    n: int,
+    u: np.ndarray,
+    v: np.ndarray,
+    tree_mask: np.ndarray,
+    parent_t: np.ndarray,
+    depth_t: np.ndarray,
+    up: np.ndarray,
+    beta: np.ndarray,
+    crossing: np.ndarray,
+    crit_order: np.ndarray,
+    phase1_accept: np.ndarray,
+    group_of_edge: np.ndarray,
+    dirty0: np.ndarray,
+    budget: int,
+) -> np.ndarray:
+    """Returns (L,) bool — final accepted off-tree edges.
+
+    phase1_accept: (L,) bool, meaningful for crossing edges only.
+    group_of_edge: (L,) int64 dense group index, -1 for non-crossing.
+    dirty0: (L,) bool — initial dirty set (overflowed groups).
+    """
+    L = len(u)
+    offtree = ~tree_mask
+    adj = H.tree_adjacency(parent_t, n)
+    dirty = dirty0.copy()
+    out = np.zeros(L, bool)
+
+    acc_u: list = []
+    acc_v: list = []
+    acc_b: list = []
+    au = np.empty(0, np.int64)
+    av = np.empty(0, np.int64)
+    ab = np.empty(0, np.int64)
+    stale = True
+
+    def covered_by_any(e: int) -> bool:
+        nonlocal au, av, ab, stale
+        if not acc_u:
+            return False
+        if stale:
+            au = np.array(acc_u, np.int64)
+            av = np.array(acc_v, np.int64)
+            ab = np.array(acc_b, np.int64)
+            stale = False
+        x, y = int(u[e]), int(v[e])
+        dxu = H.tree_dist_np(up, depth_t, x, au)
+        dxv = H.tree_dist_np(up, depth_t, x, av)
+        dyu = H.tree_dist_np(up, depth_t, y, au)
+        dyv = H.tree_dist_np(up, depth_t, y, av)
+        pair = ((dxu <= ab) & (dyv <= ab)) | ((dxv <= ab) & (dyu <= ab))
+        return bool(pair.any())
+
+    count = 0
+    for e in crit_order:
+        e = int(e)
+        if count == budget:
+            break
+        if crossing[e] and not dirty[e]:
+            dec = bool(phase1_accept[e])
+        else:
+            dec = not covered_by_any(e)
+        if crossing[e] and dec != bool(phase1_accept[e]):
+            # flip: later same-group phase-1 decisions are stale
+            dirty |= group_of_edge == group_of_edge[e]
+        if dec:
+            out[e] = True
+            count += 1
+            acc_u.append(int(u[e]))
+            acc_v.append(int(v[e]))
+            acc_b.append(int(beta[e]))
+            stale = True
+            if not crossing[e]:
+                # Alg. 6 after-effects: dirty everything this edge covers
+                s1 = H.ball_np(adj, int(u[e]), int(beta[e]))
+                s2 = H.ball_np(adj, int(v[e]), int(beta[e]))
+                m1 = np.zeros(n, bool)
+                m2 = np.zeros(n, bool)
+                m1[list(s1)] = True
+                m2[list(s2)] = True
+                cov = offtree & ((m1[u] & m2[v]) | (m2[u] & m1[v]))
+                dirty |= cov
+    return out

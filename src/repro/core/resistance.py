@@ -1,0 +1,102 @@
+"""Tree effective resistance in O(L) (LGRASS §3.2, after feGRASS).
+
+For a spanning tree T, the effective resistance between u and v is the sum
+of 1/w along the unique tree path:
+
+    R_T(u, v) = rd[u] + rd[v] - 2 * rd[lca(u, v)]
+
+where rd[x] = sum of 1/w on the root->x path. rd is computed with the same
+binary-lifting tables as the LCA (a weighted variant), so every node
+evaluates its root-path sum in O(log depth) fully-vectorised rounds — the
+TPU equivalent of the paper's linear sequential accumulation.
+
+Criticality of an off-tree edge (the sort key, §3.3):  w(e) * R_T(u, v).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lca import LiftingTables, lca, tree_distance_with_lca
+
+
+class ResistanceTables(NamedTuple):
+    rd: jax.Array  # (n,) float32 — root-path resistance sum
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def node_parent_inv_w(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    tree_mask: jax.Array,
+    parent: jax.Array,
+    n: int,
+) -> jax.Array:
+    """inv_w[c] = 1/w of the tree edge (c, parent[c]); 0 for the root."""
+    child_u = jnp.where(tree_mask & (parent[u] == v), u, -1)
+    child_v = jnp.where(tree_mask & (parent[v] == u), v, -1)
+    inv = jnp.zeros((n,), dtype=jnp.float32)
+    inv = inv.at[jnp.where(child_u >= 0, child_u, n)].set(
+        jnp.where(child_u >= 0, 1.0 / w, 0.0), mode="drop"
+    )
+    inv = inv.at[jnp.where(child_v >= 0, child_v, n)].set(
+        jnp.where(child_v >= 0, 1.0 / w, 0.0), mode="drop"
+    )
+    return inv
+
+
+@jax.jit
+def root_path_sums(t: LiftingTables, inv_w: jax.Array) -> ResistanceTables:
+    """rd[x] = sum of inv_w along root->x, via weighted binary lifting."""
+    log, n = t.up.shape
+
+    def build(carry, _):
+        up_k, ws_k = carry
+        ws_next = ws_k + ws_k[up_k]
+        up_next = up_k[up_k]
+        return (up_next, ws_next), (up_k, ws_k)
+
+    (_, _), (ups, wsums) = jax.lax.scan(
+        build, (t.up[0], inv_w), None, length=log
+    )
+
+    nodes = jnp.arange(n, dtype=jnp.int32)
+    rem = t.depth
+
+    def climb(i, state):
+        cur, acc, rem = state
+        k = log - 1 - i
+        take = (rem >> k) & 1
+        acc = acc + jnp.where(take == 1, wsums[k][cur], 0.0)
+        cur = jnp.where(take == 1, ups[k][cur], cur)
+        return cur, acc, rem & ~(1 << k)
+
+    _, rd, _ = jax.lax.fori_loop(
+        0, log, climb, (nodes, jnp.zeros((n,), jnp.float32), rem)
+    )
+    return ResistanceTables(rd=rd)
+
+
+@jax.jit
+def edge_resistance(
+    t: LiftingTables, r: ResistanceTables, u: jax.Array, v: jax.Array,
+    edge_lca: jax.Array,
+) -> jax.Array:
+    return r.rd[u] + r.rd[v] - 2.0 * r.rd[edge_lca]
+
+
+@jax.jit
+def criticality(
+    t: LiftingTables,
+    r: ResistanceTables,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    edge_lca: jax.Array,
+) -> jax.Array:
+    """Spectral criticality w(e) * R_T(e) — the greedy's sort key."""
+    return w * edge_resistance(t, r, u, v, edge_lca)

@@ -1,0 +1,156 @@
+"""Linear-time radix sort in JAX (LGRASS §3.3, TPU adaptation).
+
+The paper sorts non-negative float64 keys by reinterpreting them as
+integers (IEEE-754 order-preserving bit trick) and running an 8-pass
+byte-wise radix sort. Our criticality keys are float32, so the TPU port
+uses the same trick on uint32 with 4 byte passes (an 8-pass uint64 variant
+is provided for f64 fidelity via a (hi, lo) uint32 pair — no x64 needed).
+
+Per pass the positions are computed with the *chunked one-hot* scheme:
+split the key stream into chunks of C, build a (C, 256) one-hot, and get
+  - the global digit histogram (phase A scan),
+  - the stable within-digit rank via exclusive prefix over chunks +
+    running per-digit carry (phase B scan).
+This maps the scalar bucket counters of the CPU algorithm onto dense
+(C, 256) matrix ops — the MXU/VPU-friendly formulation — and is what the
+`radix_hist` Pallas kernel implements for the histogram phase.
+
+Everything is O(L) per pass with a 256-wide constant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_CHUNK = 1024
+_NBUCKETS = 256
+
+
+def float32_sort_key(x: jax.Array) -> jax.Array:
+    """Order-preserving map float32 -> uint32 (IEEE-754 trick, §3.3).
+
+    For x >= 0 this flips only the sign bit; for x < 0 all bits flip, so
+    uint comparison == float comparison for any finite input.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits >> 31
+    return jnp.where(sign == 1, ~bits, bits | jnp.uint32(0x80000000))
+
+
+def _pad_len(m: int) -> int:
+    return (m + _CHUNK - 1) // _CHUNK * _CHUNK
+
+
+def _digit_histogram(digits: jax.Array, nb: int = _NBUCKETS,
+                     chunk: int = _CHUNK) -> jax.Array:
+    """(Lp,) bucket ids -> (nb,) int32 histogram, chunk-scanned."""
+    chunks = digits.reshape(-1, chunk)
+
+    def step(hist, ck):
+        onehot = ck[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]
+        return hist + jnp.sum(onehot.astype(jnp.int32), axis=0), None
+
+    hist, _ = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
+    return hist
+
+
+def _digit_positions(digits: jax.Array, offsets: jax.Array,
+                     nb: int = _NBUCKETS, chunk: int = _CHUNK) -> jax.Array:
+    """Stable output position of each element given per-bucket offsets."""
+    chunks = digits.reshape(-1, chunk)
+
+    def step(carry, ck):
+        onehot = ck[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]
+        onehot_i = onehot.astype(jnp.int32)
+        # exclusive prefix within the chunk, per bucket
+        within = jnp.cumsum(onehot_i, axis=0) - onehot_i
+        rank = carry[ck] + jnp.sum(within * onehot_i, axis=1)
+        pos = offsets[ck] + rank
+        return carry + jnp.sum(onehot_i, axis=0), pos
+
+    _, pos = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
+    return pos.reshape(-1)
+
+
+def bucket_ranks(keys: jax.Array, n_buckets: int,
+                 chunk: int = _CHUNK) -> jax.Array:
+    """Stable rank of each element within its bucket, O(L * nb / chunk)
+    scan of dense (chunk, nb) one-hots. Used by radix passes and by the
+    MoE capacity dispatch (rank-in-expert)."""
+    m = keys.shape[0]
+    lp = (m + chunk - 1) // chunk * chunk
+    kp = jnp.full((lp,), n_buckets - 1, jnp.int32).at[:m].set(
+        keys.astype(jnp.int32))
+    pos = _digit_positions(kp, jnp.zeros((n_buckets,), jnp.int32), n_buckets,
+                           chunk)
+    return pos[:m]
+
+
+def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
+                   m: int) -> jax.Array:
+    """One stable byte pass: reorder `perm` by byte `shift` of keys[perm]."""
+    lp = perm.shape[0]
+    cur = keys_u32[perm]
+    digits = ((cur >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+    # padded tail sorts to the end: give it digit 255 and rely on the fact
+    # that real keys never use the pad slot (we mask below instead).
+    valid = jnp.arange(lp) < m
+    digits = jnp.where(valid, digits, _NBUCKETS - 1)
+    hist = _digit_histogram(digits)
+    offsets = jnp.cumsum(hist) - hist  # exclusive
+    pos = _digit_positions(digits, offsets)
+    out = jnp.zeros((lp,), dtype=perm.dtype).at[pos].set(perm)
+    return out
+
+
+@jax.jit
+def radix_argsort_u32(keys: jax.Array) -> jax.Array:
+    """Stable ascending argsort of uint32 keys in 4 byte passes, O(L)."""
+    m = keys.shape[0]
+    lp = _pad_len(m)
+    keys_p = jnp.zeros((lp,), dtype=jnp.uint32).at[:m].set(keys)
+    keys_p = keys_p.at[m:].set(jnp.uint32(0xFFFFFFFF))
+    perm = jnp.arange(lp, dtype=jnp.int32)
+    for shift in (0, 8, 16, 24):
+        perm = _counting_pass(keys_p, perm, shift, lp)  # pads carry key MAX
+    return perm[:m]
+
+
+@jax.jit
+def radix_argsort_u64pair(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Stable ascending argsort of (hi, lo) uint32 pairs — the paper's
+    8-pass INT64 sort without requiring x64 mode."""
+    m = hi.shape[0]
+    lp = _pad_len(m)
+    hi_p = jnp.full((lp,), jnp.uint32(0xFFFFFFFF)).at[:m].set(hi)
+    lo_p = jnp.full((lp,), jnp.uint32(0xFFFFFFFF)).at[:m].set(lo)
+    perm = jnp.arange(lp, dtype=jnp.int32)
+    for shift in (0, 8, 16, 24):
+        perm = _counting_pass(lo_p, perm, shift, lp)
+    for shift in (0, 8, 16, 24):
+        perm = _counting_pass(hi_p, perm, shift, lp)
+    return perm[:m]
+
+
+@jax.jit
+def sort_f32_desc_stable(keys: jax.Array) -> jax.Array:
+    """Permutation sorting float32 keys descending; ties keep input order.
+
+    This is the edge-criticality sort: (criticality desc, edge-id asc).
+    """
+    k = float32_sort_key(keys)
+    return radix_argsort_u32(~k)  # bitwise-not of a monotone map => desc
+
+
+@jax.jit
+def stable_group_sort(group_ids: jax.Array, rank_perm: jax.Array) -> jax.Array:
+    """Edges already permuted by criticality rank (`rank_perm`); stable-sort
+    that order by uint32 `group_ids` so groups are contiguous and
+    criticality-ordered within each group. Returns the composed permutation.
+    """
+    g = group_ids[rank_perm].astype(jnp.uint32)
+    p = radix_argsort_u32(g)
+    return rank_perm[p]

@@ -1,0 +1,213 @@
+"""LGRASS end-to-end pipeline (Fig. 1b/1c): the public sparsifier API.
+
+    EFF  -> graph BFS + depth-scaled effective weights      (bfs.py)
+    MST  -> Borůvka maximum spanning tree                   (mst.py)
+    LCA  -> binary lifting + root-subtree shortcut          (lca.py)
+    RES  -> root-path resistance sums -> criticality        (resistance.py)
+    SORT -> 4-pass radix sort on IEEE-754 keys              (sort.py)
+    MARK -> per-group greedy, basic or lockstep-parallel    (marking.py)
+    REC  -> sequential recovery of non-crossing edges       (recovery.py)
+
+All device stages are jit-compiled; `phase1_device` additionally exposes
+the full device program as a single jittable function for the multi-pod
+dry-run. The recovery tail runs on host, mirroring the paper's own
+sequential Algorithm 6 stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import _host as H
+from repro.core.baseline import default_budget
+from repro.core.bfs import bfs, effective_weights, select_root
+from repro.core.graph import Graph
+from repro.core.lca import build_lifting, lca_with_shortcut
+from repro.core.marking import (
+    GroupLayout,
+    Phase1Result,
+    build_group_layout,
+    group_keys,
+    phase1_basic,
+    phase1_parallel,
+)
+from repro.core.mst import boruvka_mst
+from repro.core.recovery import recover
+from repro.core.resistance import (
+    criticality,
+    node_parent_inv_w,
+    root_path_sums,
+)
+from repro.core.sort import sort_f32_desc_stable
+
+
+def _log2_ceil_host(n: int) -> int:
+    k = 1
+    while (1 << k) < n:
+        k += 1
+    return max(k, 1)
+
+
+@dataclasses.dataclass
+class SparsifyResult:
+    edge_mask: np.ndarray       # (L,) bool — tree + accepted off-tree edges
+    tree_mask: np.ndarray       # (L,) bool
+    accepted_mask: np.ndarray   # (L,) bool — accepted off-tree edges
+    n_accepted: int
+    n_groups: int
+    n_overflow_groups: int
+    n_dirty: int
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
+def phase1_device(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    n: int,
+    k_cap: int = 32,
+    parallel: bool = True,
+    lift_levels: int | None = None,
+):
+    """The full device program: EFF→MST→LCA→RES→SORT→MARK(phase 1).
+
+    Returns everything the host recovery tail needs. This function is the
+    unit the multi-pod dry-run lowers and compiles.
+    """
+    root = select_root(u, v, n)
+    depth_g, _ = bfs(u, v, n, root)
+    eff = effective_weights(u, v, w, depth_g, n)
+
+    perm_eff = sort_f32_desc_stable(eff)
+    rank_eff = (
+        jnp.zeros_like(perm_eff)
+        .at[perm_eff]
+        .set(jnp.arange(perm_eff.shape[0], dtype=jnp.int32))
+    )
+    tree_mask = boruvka_mst(u, v, rank_eff, n)
+
+    depth_t, parent_t = bfs(u, v, n, root, edge_mask=tree_mask)
+    t = build_lifting(parent_t, depth_t, n, levels=lift_levels)
+    elca = lca_with_shortcut(t, root, u, v)
+    inv_w = node_parent_inv_w(u, v, w, tree_mask, parent_t, n)
+    r = root_path_sums(t, inv_w)
+    crit = criticality(t, r, u, v, w, elca)
+    beta = jnp.maximum(
+        jnp.minimum(depth_t[u], depth_t[v]) - depth_t[elca], 1
+    ).astype(jnp.int32)
+
+    hi, lo, crossing = group_keys(t, root, u, v, elca, ~tree_mask)
+    layout = build_group_layout(crit, hi, lo, crossing)
+    su, sv, sbeta = u[layout.perm], v[layout.perm], beta[layout.perm]
+    fn = phase1_parallel if parallel else phase1_basic
+    p1 = fn(t, su, sv, sbeta, layout, k_cap=k_cap)
+    return dict(
+        tree_mask=tree_mask,
+        parent_t=parent_t,
+        depth_t=depth_t,
+        up=t.up,
+        beta=beta,
+        crit=crit,
+        crossing=crossing,
+        perm=layout.perm,
+        gidx=layout.gidx,
+        accept_sorted=p1.accept,
+        group_overflow=p1.group_overflow,
+        n_groups=layout.n_groups,
+    )
+
+
+def lgrass_sparsify(
+    g: Graph,
+    budget: Optional[int] = None,
+    k_cap: int = 32,
+    parallel: bool = True,
+    auto_lift_bound: bool = False,
+) -> SparsifyResult:
+    """Run LGRASS on a host graph; returns the sparsifier edge mask.
+
+    auto_lift_bound: measure the tree depth first (one extra BFS) and
+    build depth-bounded lifting tables — identical output, ~log(N)/log(D)
+    less LCA gather traffic (§Perf 'lift_bound').
+    """
+    n, L = g.n, g.m
+    if budget is None:
+        budget = default_budget(n)
+    u = jnp.asarray(g.u, jnp.int32)
+    v = jnp.asarray(g.v, jnp.int32)
+    w = jnp.asarray(g.w, jnp.float32)
+
+    lift_levels = None
+    if auto_lift_bound:
+        # estimate from graph BFS depth ×4 (tree paths stretch); the
+        # post-hoc check below guarantees correctness regardless.
+        root = select_root(u, v, n)
+        depth_g, _ = bfs(u, v, n, root)
+        dmax = int(jax.device_get(jnp.max(jnp.where(
+            depth_g == jnp.iinfo(jnp.int32).max, 0, depth_g))))
+        safe = 1
+        while (1 << safe) <= 4 * max(dmax, 1):
+            safe += 1
+        lift_levels = min(safe, _log2_ceil_host(n + 1))
+
+    d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
+                                     lift_levels))
+    if lift_levels is not None:
+        tree_dmax = int(d["depth_t"].max())
+        if tree_dmax >= (1 << lift_levels):  # bound violated: redo safely
+            d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
+                                             None))
+
+    tree_mask = d["tree_mask"].astype(bool)
+    crossing = d["crossing"].astype(bool)
+    perm = d["perm"].astype(np.int64)
+    gidx = d["gidx"].astype(np.int64)
+
+    # per-edge phase-1 decision / dense group / overflow dirtiness
+    accept_by_edge = np.zeros(L, bool)
+    accept_by_edge[perm] = d["accept_sorted"]
+    group_of_edge = np.full(L, -1, np.int64)
+    group_of_edge[perm] = gidx
+    group_of_edge[~crossing] = -1
+    ovf_groups = d["group_overflow"].astype(bool)
+    dirty0 = np.zeros(L, bool)
+    cross_perm_mask = crossing[perm]
+    dirty_sorted = ovf_groups[gidx] & cross_perm_mask
+    dirty0[perm] = dirty_sorted
+
+    # global criticality order over all off-tree edges (incl. non-crossing)
+    offtree = ~tree_mask
+    keys = np.where(offtree, d["crit"], np.float32(-np.inf)).astype(np.float32)
+    crit_order = H.desc_stable_order_np(keys)[: int(offtree.sum())]
+
+    accepted = recover(
+        n=n,
+        u=g.u.astype(np.int64),
+        v=g.v.astype(np.int64),
+        tree_mask=tree_mask,
+        parent_t=d["parent_t"],
+        depth_t=d["depth_t"],
+        up=d["up"],
+        beta=d["beta"],
+        crossing=crossing,
+        crit_order=crit_order,
+        phase1_accept=accept_by_edge,
+        group_of_edge=group_of_edge,
+        dirty0=dirty0,
+        budget=budget,
+    )
+    return SparsifyResult(
+        edge_mask=tree_mask | accepted,
+        tree_mask=tree_mask,
+        accepted_mask=accepted,
+        n_accepted=int(accepted.sum()),
+        n_groups=int(d["n_groups"]),
+        n_overflow_groups=int(ovf_groups.sum()),
+        n_dirty=int(dirty0.sum()),
+    )

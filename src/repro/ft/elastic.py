@@ -1,0 +1,88 @@
+"""Fault tolerance & elasticity: failure detection, straggler mitigation,
+elastic re-meshing. On real fleets failure signals come from the runtime
+(missed heartbeats, NCCL/ICI timeouts); here the *policy* layer is real
+and the signal layer is injectable so tests can simulate failures.
+
+Policies implemented:
+  * checkpoint/restart — trainer saves every k steps and restarts from the
+    latest checkpoint after a step failure (see train/trainer.py);
+  * straggler detection — EWMA of step time; a step slower than
+    `straggler_factor` × EWMA raises a straggler event (on a fleet: evict
+    + re-dispatch the shard; here: logged + counted, and the LGRASS group
+    partitioner re-balances via its LPT packing);
+  * elastic re-mesh — rebuild a smaller/larger mesh and reshard the
+    checkpointed state onto it (`remesh_state`), exercising the same code
+    path a real elastic resize uses (restore with different shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    max_restarts: int = 3
+    ewma_alpha: float = 0.2
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.ewma: Optional[float] = None
+        self.events: List[Tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = (self.ewma is not None and
+                        dt > self.cfg.straggler_factor * self.ewma)
+        if is_straggler:
+            self.events.append((step, dt))
+        a = self.cfg.ewma_alpha
+        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        return is_straggler
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail at given steps."""
+
+    def __init__(self, fail_steps=()):
+        self.fail_steps = set(fail_steps)
+        self.fired = set()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def resolve_spec_for_mesh(p: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't exist on this mesh (elastic downsizing
+    from (pod,data,model) to (data,model) or a single-device mesh)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*[fix(e) for e in p])
+
+
+def remesh_state(state, spec_tree, new_mesh: Mesh):
+    """Reshard a (host or device) state pytree onto a new mesh."""
+    def place(x, p):
+        sh = NamedSharding(new_mesh, resolve_spec_for_mesh(p, new_mesh))
+        return jax.device_put(np.asarray(jax.device_get(x)), sh)
+
+    return jax.tree.map(place, state, spec_tree,
+                        is_leaf=lambda x: not isinstance(x, (dict, list)))

@@ -1,0 +1,92 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret=None` auto-selects: compiled Mosaic on TPU backends, Pallas
+interpret mode elsewhere (CPU CI) — same kernel body either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_intersect import bitmap_intersect_any as _bitmap
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.radix_hist import bucket_rank_hist as _brh
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    qpos=None, kpos=None, block_q=128, block_k=128,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, d); k/v: (B, Sk, Kv, d) (GQA kv repeated as needed).
+
+    Returns (B, Sq, H, d).
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    if qpos is None:
+        qpos = jnp.arange(sq, dtype=jnp.int32)
+    if kpos is None:
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = flash_attention_bhsd(
+        qb, kb, vb, qpos.astype(jnp.int32), kpos.astype(jnp.int32),
+        causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=_auto_interpret(interpret))
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def bucket_rank_hist(digits, *, chunk=1024,
+                     interpret: Optional[bool] = None):
+    m = digits.shape[0]
+    pad = (-m) % chunk
+    if pad:
+        digits = jnp.concatenate(
+            [digits, jnp.full((pad,), 255, digits.dtype)])
+    rank, hist = _brh(digits.astype(jnp.int32), chunk=chunk,
+                      interpret=_auto_interpret(interpret))
+    if pad:
+        hist = hist.at[255].add(-pad)
+        rank = rank[:m]
+    return rank, hist
+
+
+def radix_argsort_u32(keys, *, chunk=1024,
+                      interpret: Optional[bool] = None):
+    """Stable ascending argsort via 4 byte passes of the Pallas kernel."""
+    m = keys.shape[0]
+    perm = jnp.arange(m, dtype=jnp.int32)
+    for shift in (0, 8, 16, 24):
+        cur = keys[perm]
+        digits = ((cur >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+        rank, hist = bucket_rank_hist(digits, chunk=chunk,
+                                      interpret=interpret)
+        offsets = jnp.cumsum(hist) - hist
+        pos = offsets[digits] + rank
+        perm = jnp.zeros((m,), jnp.int32).at[pos].set(perm)
+    return perm
+
+
+def bitmap_intersect_any(m1, m2, *, block=1024,
+                         interpret: Optional[bool] = None):
+    l, w = m1.shape
+    pad = (-l) % block
+    if pad:
+        z = jnp.zeros((pad, w), m1.dtype)
+        m1 = jnp.concatenate([m1, z])
+        m2 = jnp.concatenate([m2, z])
+    out = _bitmap(m1, m2, block=block, interpret=_auto_interpret(interpret))
+    return out[:l]

@@ -1,0 +1,271 @@
+"""HLO-text cost analyzer with correct while-loop trip-count scaling.
+
+XLA's `compiled.cost_analysis()` counts a while body ONCE, which silently
+undercounts scan-over-layers programs by ~n_layers. This module parses
+the compiled (SPMD-partitioned, per-device) HLO text and computes, per
+computation:
+
+  * dot FLOPs          — 2 * prod(result dims) * prod(contracting dims),
+                         operand shapes resolved via a per-computation
+                         symbol table;
+  * HBM traffic proxy  — operands read + result written for every
+                         top-level op (fusion-internal ops excluded: they
+                         live in registers/VMEM);
+  * collective wire bytes — all-gather / all-reduce / reduce-scatter /
+                         all-to-all / collective-permute with ring-model
+                         multipliers;
+
+then walks the call graph (while bodies × known_trip_count, fusions for
+their internal dot FLOPs, calls/conditionals × 1) to exact entry totals.
+
+This is the measurement instrument for §Roofline / §Perf: per-op counts
+expose redundant all-gathers and remat recompute directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[su]\d+|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{")
+_TRIP_RE = re.compile(r'known_trip_count[\\\":{]+n[\\\":]+(\d+)')
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|calls|to_apply|condition|branch_computations)="
+    r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_list_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _dims_of(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0        # fusion-aware HBM traffic model
+    mem_bytes_upper: float = 0.0  # every top-level op (pessimistic)
+    mem_bytes_dots: float = 0.0   # dot operands/results only (lower bound)
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float, bool]] = dataclasses.field(
+        default_factory=list)  # (callee, multiplier, fusion_internal)
+
+
+# ops whose operands/results hit HBM even after TPU fusion: matmuls,
+# data-movement ops, fusion boundaries, collectives. Plain elementwise
+# top-level ops are assumed fused away (the CPU backend fuses less than
+# the TPU backend; counting them would overstate HBM traffic ~10x).
+_HBM_OPS = {
+    "dot", "convolution", "fusion", "gather", "scatter", "scatter-add",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "sort", "copy", "concatenate", "pad", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "all-gather-start", "all-reduce-start", "cholesky", "triangular-solve",
+    "rng", "iota-large",
+}
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(rest: str, rtype: str, symtab: Dict[str, str]) -> float:
+    rd = _dims_of(rtype)
+    if rd is None:
+        return 0.0
+    _, rdims = rd
+    out = 1.0
+    for d in rdims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", rest)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) \
+        else []
+    ops = _OPERAND_RE.findall(rest.split("),")[0] + ")")
+    k = 1.0
+    if ops:
+        lhs_type = symtab.get(ops[0])
+        if lhs_type:
+            ld = _dims_of(lhs_type)
+            if ld:
+                for c in cdims:
+                    if c < len(ld[1]):
+                        k *= ld[1][c]
+    return 2.0 * out * k
+
+
+def analyze(text: str) -> Dict:
+    comps = _split_computations(text)
+    costs: Dict[str, CompCost] = {}
+    entry_name = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry_name = m.group(1)
+
+    fusion_bodies = set()
+    for cname, lines in comps.items():
+        cc = CompCost()
+        symtab: Dict[str, str] = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, rest = m.groups()
+            symtab[name] = rtype
+            rbytes = _shape_list_bytes(rtype)
+            # operand bytes via symbol table
+            obytes = 0
+            arg_part = rest.split(")")[0]
+            for op in _OPERAND_RE.findall(arg_part):
+                if op in symtab:
+                    obytes += _shape_list_bytes(symtab[op])
+            if opcode == "dot":
+                cc.flops += _dot_flops(rest, rtype, symtab)
+                cc.mem_bytes_dots += rbytes + obytes
+            is_coll = None
+            for ck in COLLECTIVES:
+                if opcode == ck or opcode == ck + "-start":
+                    is_coll = ck
+                    break
+            if is_coll:
+                if is_coll == "reduce-scatter":
+                    nbytes = obytes if obytes else rbytes
+                else:
+                    nbytes = rbytes if is_coll != "all-reduce" else rbytes
+                wire = nbytes * _WIRE_MULT[is_coll]
+                cc.coll_bytes += wire
+                cc.coll_by_kind[is_coll] = (
+                    cc.coll_by_kind.get(is_coll, 0.0) + wire)
+                cc.coll_counts[is_coll] = cc.coll_counts.get(is_coll, 0) + 1
+            if opcode not in ("parameter", "constant", "tuple",
+                              "get-tuple-element", "bitcast", "while",
+                              "conditional", "call"):
+                cc.mem_bytes_upper += rbytes + obytes
+                if opcode in _HBM_OPS:
+                    cc.mem_bytes += rbytes + obytes
+            # call graph edges
+            if opcode == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = float(tm.group(1))
+                for attr in ("body", "condition"):
+                    am = re.search(attr + r"=%?([\w.\-]+)", rest)
+                    if am:
+                        cc.calls.append((am.group(1), trip, False))
+            elif opcode == "fusion":
+                am = re.search(r"calls=%?([\w.\-]+)", rest)
+                if am:
+                    cc.calls.append((am.group(1), 1.0, True))
+                    fusion_bodies.add(am.group(1))
+            elif opcode in ("call", "conditional", "reduce", "scatter",
+                            "sort", "map", "reduce-window", "all-reduce",
+                            "reduce-scatter", "select-and-scatter",
+                            "custom-call"):
+                for am in re.finditer(
+                        r"(?:to_apply|branch_computations|called_computations"
+                        r")=[{]?%?([\w.\-, %]+)[}]?", rest):
+                    for callee in re.findall(r"[\w.\-]+", am.group(1)):
+                        if callee in comps:
+                            cc.calls.append((callee, 1.0, False))
+        costs[cname] = cc
+
+    memo: Dict[Tuple[str, bool], Tuple] = {}
+
+    def total(cname: str, fusion_ctx: bool):
+        key = (cname, fusion_ctx)
+        if key in memo:
+            return memo[key]
+        cc = costs.get(cname)
+        if cc is None:
+            return (0.0, 0.0, 0.0, 0.0, {}, {})
+        fl = cc.flops
+        mb = 0.0 if fusion_ctx else cc.mem_bytes
+        mu = 0.0 if fusion_ctx else cc.mem_bytes_upper
+        md = cc.mem_bytes_dots
+        cb = cc.coll_bytes
+        kinds = dict(cc.coll_by_kind)
+        counts = dict(cc.coll_counts)
+        memo[key] = (fl, mb, mu, md, cb, kinds, counts)  # cycle guard
+        for callee, mult, as_fusion in cc.calls:
+            f2, m2, u2, d2, c2, k2, n2 = total(callee,
+                                               fusion_ctx or as_fusion)
+            fl += f2 * mult
+            mb += m2 * mult
+            mu += u2 * mult
+            md += d2 * mult
+            cb += c2 * mult
+            for k, v in k2.items():
+                kinds[k] = kinds.get(k, 0.0) + v * mult
+            for k, v in n2.items():
+                counts[k] = counts.get(k, 0) + int(v * mult)
+        memo[key] = (fl, mb, mu, md, cb, kinds, counts)
+        return memo[key]
+
+    if entry_name is None:
+        # fall back: the computation with the most instructions
+        entry_name = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    fl, mb, mu, md, cb, kinds, counts = total(entry_name, False)
+    return dict(
+        flops=fl,
+        mem_bytes=mb,
+        mem_bytes_upper=mu,
+        mem_bytes_dots=md,
+        collective_bytes=cb,
+        collective_by_kind=kinds,
+        collective_counts=counts,
+        n_computations=len(comps),
+        entry=entry_name,
+    )

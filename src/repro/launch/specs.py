@@ -1,0 +1,158 @@
+"""Shape/sharding stand-ins for the dry-run: ShapeDtypeStruct trees with
+NamedShardings attached (no allocation), for every model input and state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.ft.elastic import resolve_spec_for_mesh
+from repro.launch.mesh import batch_axes_for
+from repro.models.model import LM
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    spec = resolve_spec_for_mesh(spec, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    """ShapeDtypeStructs for one global batch (train / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes_for(b, mesh)
+    if cfg.is_encoder:
+        return dict(
+            features=_sds((b, s, cfg.feat_dim), jnp.float32, mesh,
+                          P(ba, None, None)),
+            labels=_sds((b, s), jnp.int32, mesh, P(ba, None)),
+            mask=_sds((b, s), jnp.bool_, mesh, P(ba, None)),
+        )
+    return dict(
+        tokens=_sds((b, s), jnp.int32, mesh, P(ba, None)),
+        labels=_sds((b, s), jnp.int32, mesh, P(ba, None)),
+    )
+
+
+def state_specs(model: LM, mesh: Mesh) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, NamedSharding tree) for the train state."""
+    from repro.train.train_step import make_train_state, make_train_state_specs
+
+    shapes = jax.eval_shape(
+        lambda rng: make_train_state(model, rng), jax.random.PRNGKey(0))
+    pspec = make_train_state_specs(model)
+    shard_tree = jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve_spec_for_mesh(p, mesh)),
+        pspec, is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda sh, nd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=nd),
+        shapes, shard_tree)
+    return sds, shard_tree
+
+
+def params_specs(model: LM, mesh: Mesh,
+                 fsdp: bool = True) -> Tuple[Any, Any]:
+    """fsdp=False (serving): drop the 'data' (FSDP) axis from every param
+    spec so weights stay TP-resident — no per-step param all-gather on the
+    decode path (opt 'serve_params_resident')."""
+    specs_holder = {}
+
+    def f(rng):
+        params, specs = model.init(rng)
+        specs_holder["s"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+
+    def resolve(p: P) -> P:
+        p = resolve_spec_for_mesh(p, mesh)
+        if not fsdp:
+            fixed = []
+            for e in p:
+                if e == "data":
+                    fixed.append(None)
+                elif isinstance(e, (tuple, list)):
+                    kept = tuple(a for a in e if a != "data")
+                    fixed.append(kept if kept else None)
+                else:
+                    fixed.append(e)
+            p = P(*fixed)
+        return p
+
+    shard_tree = jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve(p)),
+        specs_holder["s"], is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda sh, nd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=nd),
+        shapes, shard_tree)
+    return sds, shard_tree
+
+
+def _cache_leaf_spec(cfg: ArchConfig, key: str, ndim: int, batch_axes,
+                     stacked: bool, slots: int) -> P:
+    lead = (None,) if stacked else ()
+    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % 16 == 0
+    ssm_ok = cfg.has_ssm and cfg.ssm_nheads % 16 == 0
+    # when KV heads can't shard 16-way, shard the cache *sequence* dim over
+    # 'model' instead (sequence-parallel decode: scores/softmax/out get
+    # partial-sum collectives — tiny next to the cache-read traffic)
+    seq_shard = (not kv_ok) and slots >= 4096 and slots % 16 == 0
+    if key in ("k", "v"):
+        return P(*lead, batch_axes, "model" if seq_shard else None,
+                 "model" if kv_ok else None, None)
+    if key in ("ckv", "krope"):
+        mla_seq = slots >= 4096 and slots % 16 == 0
+        return P(*lead, batch_axes, "model" if mla_seq else None, None)
+    if key == "pos":
+        if seq_shard or (cfg.attn_type == "mla" and slots >= 4096
+                         and slots % 16 == 0):
+            return P(*lead, "model")
+        return P(*lead, None)
+    if key == "state":
+        return P(*lead, batch_axes, "model" if ssm_ok else None, None, None)
+    if key == "conv":
+        return P(*lead, batch_axes, None, None)
+    return P(*([None] * ndim))
+
+
+def cache_specs(model: LM, shape: ShapeConfig, mesh: Mesh) -> Any:
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes_for(b, mesh)
+    stacked = cfg.layout == "scan"
+    shapes = jax.eval_shape(lambda: model.init_caches(b, s))
+
+    def slots_of(key: str, shp) -> int:
+        if key in ("k", "v"):
+            return shp[-3]
+        if key in ("ckv", "krope"):
+            return shp[-2]
+        if key == "pos":
+            return shp[-1]
+        return 0
+
+    def walk(prefix_key: str, node):
+        if isinstance(node, dict):
+            return {k: walk(k, v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(prefix_key, x) for x in node]
+        spec = _cache_leaf_spec(cfg, prefix_key, node.ndim, ba, stacked,
+                                slots_of(prefix_key, node.shape))
+        return _sds(node.shape, node.dtype, mesh, spec)
+
+    return walk("", shapes)
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    b = shape.global_batch
+    ba = batch_axes_for(b, mesh)
+    tok = _sds((b, 1), jnp.int32, mesh, P(ba, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return tok, pos

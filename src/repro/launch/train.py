@@ -1,0 +1,68 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch phi3-mini-3.8b --reduced \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck [--resume]
+
+Full-size archs train on the production mesh when real TPU devices are
+present; on the CPU CI host use --reduced. The loop is the fault-tolerant
+Trainer (checkpoint/restart, straggler monitor, deterministic data).
+"""
+import argparse
+import dataclasses
+import logging
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--compress", choices=["topk", "int8"], default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.ft.elastic import FaultConfig
+    from repro.models.model import LM
+    from repro.optim.optimizer import OptConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = LM(cfg)
+    data = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        is_encoder=cfg.is_encoder, feat_dim=cfg.feat_dim))
+    trainer = Trainer(
+        model, data,
+        OptConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                  total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, log_every=args.log_every,
+                      micro_batches=args.micro, compress=args.compress,
+                      seed=args.seed),
+        args.ckpt_dir,
+        fault_cfg=FaultConfig(ckpt_every=args.ckpt_every),
+    )
+    out = trainer.run()
+    h = out["history"]
+    print(f"trained {len(h)} steps; loss {h[0]['loss']:.4f} -> "
+          f"{h[-1]['loss']:.4f}; restarts={out['restarts']} "
+          f"stragglers={out['stragglers']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

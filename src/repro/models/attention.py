@@ -1,0 +1,389 @@
+"""Attention: GQA (with RoPE, causal / bidirectional / sliding-window,
+ring-buffer KV cache) and MLA (multi-head latent attention with compressed
+latent cache + absorbed decode).
+
+Caches
+------
+GQA full:    {k, v: (B, S_max, Kv, hd), pos: (S_max,) abs positions (-1 empty)}
+GQA window:  same arrays with S_max = window, written mod window (ring).
+MLA:         {ckv: (B, S_max, r_kv), krope: (B, S_max, d_r), pos: (S_max,)}
+SSM caches live in ssm.py.
+
+Decode computes scores against every cache slot with a validity mask —
+fixed shapes, no dynamic slicing, which is what both XLA SPMD and the
+Pallas kernel path want.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamSet, apply_rope, normal, rmsnorm
+from repro.models.sharding import fsdp_use, shard
+
+NEG_INF = -1e9
+
+
+# ======================= GQA =======================
+def init_gqa(ps: ParamSet, rng, cfg: ArchConfig) -> None:
+    from repro.models.sharding import opt_enabled
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    std = d ** -0.5
+    kv_axis = "kv_heads" if kv % 16 == 0 else "kv_heads_rep"
+    # fusion is only expressible when the q/k/v split points align with
+    # the 16-way 'model' shard boundaries of the fused head dim
+    fuse_ok = (h % 16 == 0 and kv % 16 == 0
+               and h % ((h + 2 * kv) // 16) == 0)
+    if opt_enabled("fused_qkv") and fuse_ok:
+        # one (d, h+2kv, hd) matmul: the backward dx needs ONE partial-sum
+        # all-reduce instead of three (§Perf opt 'fused_qkv')
+        ps.add("wqkv", normal(k1, (d, h + 2 * kv, hd), std),
+               "embed", "heads", "head_dim")
+    else:
+        ps.add("wq", normal(k1, (d, h, hd), std),
+               "embed", "heads", "head_dim")
+        ps.add("wk", normal(k2, (d, kv, hd), std),
+               "embed", kv_axis, "head_dim")
+        ps.add("wv", normal(k3, (d, kv, hd), std),
+               "embed", kv_axis, "head_dim")
+    ps.add("wo", normal(k4, (h, hd, d), (h * hd) ** -0.5),
+           "heads", "head_dim", "embed")
+
+
+def _qkv(params, cfg: ArchConfig, x, dt):
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    kv_ax = "kv_heads" if kv % 16 == 0 else "kv_heads_rep"
+    if "wqkv" in params:
+        qkv = jnp.einsum(
+            "bsd,dhk->bshk", x,
+            fsdp_use(params["wqkv"], "embed", "heads", None).astype(dt))
+        return qkv[:, :, :h], qkv[:, :, h:h + kv], qkv[:, :, h + kv:]
+    q = jnp.einsum("bsd,dhk->bshk", x,
+                   fsdp_use(params["wq"], "embed", "heads", None).astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x,
+                   fsdp_use(params["wk"], "embed", kv_ax, None).astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x,
+                   fsdp_use(params["wv"], "embed", kv_ax, None).astype(dt))
+    return q, k, v
+
+
+def _gqa_scores(q, k, n_kv):
+    """q: (B,S,H,hd) k: (B,T,Kv,hd) -> (B,Kv,G,S,T) f32 scores."""
+    b, s, h, hd = q.shape
+    g = h // n_kv
+    q = q.reshape(b, s, n_kv, g, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v, h):
+    b, kv, g, s, t = p.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+# above this many query positions the reference path computes attention in
+# query chunks (lax.scan) so no (S, S) score tensor is ever materialised —
+# the jnp analogue of the flash kernel's tiling.
+ATTN_CHUNK_THRESHOLD = 8192
+ATTN_CHUNK = 1024
+
+
+def _masked_softmax_attend(q, k, v, n_kv, scale, qpos, kpos, causal, window):
+    """q: (B,Sq,H,hd) vs full k/v: (B,T,Kv,hd); qpos (B,Sq), kpos (B,T)."""
+    scores = _gqa_scores(q, k, n_kv) * scale
+    qi = qpos[:, :, None]
+    kj = kpos[:, None, :]
+    mask = jnp.ones((qpos.shape[0], qpos.shape[1], kpos.shape[1]), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(p, v, q.shape[2])
+
+
+def _banded_swa(q, k, v, positions, n_kv, scale, window):
+    """Sliding-window attention as a banded two-block computation:
+    each window-sized q chunk attends only to [its own, previous] k
+    chunks — O(S·2w) scores instead of O(S²). Exact for w-divisible S."""
+    b, s, h, hd = q.shape
+    w = window
+    nw = s // w
+    qc = q.reshape(b, nw, w, h, hd)
+    kc = k.reshape(b, nw, w, n_kv, hd)
+    vc = v.reshape(b, nw, w, n_kv, hd)
+    k2 = jnp.concatenate([jnp.roll(kc, 1, axis=1), kc], axis=2)
+    v2 = jnp.concatenate([jnp.roll(vc, 1, axis=1), vc], axis=2)
+    pq = positions.reshape(b, nw, w)
+    pk_prev = jnp.roll(pq, 1, axis=1)
+    # chunk 0 has no previous chunk: mark rolled positions invalid
+    first = (jnp.arange(nw) == 0)[None, :, None]
+    pk_prev = jnp.where(first, -1, pk_prev)
+    pk = jnp.concatenate([pk_prev, pq], axis=2)          # (b, nw, 2w)
+    g = h // n_kv
+    qg = qc.reshape(b, nw, w, n_kv, g, hd)
+    scores = jnp.einsum("bnwkgd,bntkd->bnkgwt", qg, k2,
+                        preferred_element_type=jnp.float32) * scale
+    qi = pq[:, :, None, None, :, None]
+    kj = pk[:, :, None, None, None, :]
+    mask = (kj >= 0) & (kj <= qi) & (kj > qi - w)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnkgwt,bntkd->bnwkgd", p.astype(v2.dtype), v2)
+    return out.reshape(b, s, h, hd)
+
+
+def gqa_attention(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Self-attention over full sequences (train / prefill)."""
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(params, cfg, x, dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads" if cfg.n_kv_heads % 16 == 0
+              else "kv_heads_rep", None)
+    s = q.shape[1]
+    if (window is not None and causal and not use_flash
+            and s % window == 0 and s >= 2 * window):
+        out = _banded_swa(q, k, v, positions, cfg.n_kv_heads,
+                          hd ** -0.5, window)
+        out = shard(out, "batch", "seq", "heads", None)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    elif s > ATTN_CHUNK_THRESHOLD and s % ATTN_CHUNK == 0:
+        # query-chunked exact attention: peak memory O(C*S) per step
+        nq = s // ATTN_CHUNK
+        qc = q.reshape(q.shape[0], nq, ATTN_CHUNK, *q.shape[2:])
+        pc = positions.reshape(positions.shape[0], nq, ATTN_CHUNK)
+
+        def chunk_body(_, inp):
+            q_i, qpos_i = inp
+            o = _masked_softmax_attend(q_i, k, v, cfg.n_kv_heads,
+                                       hd ** -0.5, qpos_i, positions,
+                                       causal, window)
+            return None, o
+
+        _, out = jax.lax.scan(
+            chunk_body, None,
+            (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1).reshape(q.shape)
+    else:
+        out = _masked_softmax_attend(q, k, v, cfg.n_kv_heads, hd ** -0.5,
+                                     positions, positions, causal, window)
+    out = shard(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd",
+                      out, fsdp_use(params["wo"], "heads", None,
+                                    "embed").astype(dt))
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   window: Optional[int], dtype) -> Dict:
+    slots = min(window, max_len) if window else max_len
+    hd = cfg.resolved_head_dim
+    return dict(
+        k=jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        pos=jnp.full((slots,), -1, jnp.int32),
+    )
+
+
+def gqa_fill_cache(params, cfg, x, positions, cache, window) -> Dict:
+    """Prefill: write K/V of a full prompt into the cache (last `slots`)."""
+    dt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    k = apply_rope(k, positions, cfg.rope_theta)
+    slots = cache["k"].shape[1]
+    s = k.shape[1]
+    if window:
+        # only the last `slots` positions survive the ring buffer
+        take = min(s, slots)
+        idxt = (positions[0, -take:]) % slots
+        kc = cache["k"].at[:, idxt].set(k[:, -take:])
+        vc = cache["v"].at[:, idxt].set(v[:, -take:])
+        pc = cache["pos"].at[idxt].set(positions[0, -take:].astype(jnp.int32))
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        pc = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions[0].astype(jnp.int32), 0, axis=0)
+    return dict(k=kc, v=vc, pos=pc)
+
+
+def gqa_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jax.Array,              # (B, 1, d)
+    pos: jax.Array,            # scalar int32 — absolute position
+    cache: Dict,
+    window: Optional[int],
+) -> Tuple[jax.Array, Dict]:
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    posb = jnp.broadcast_to(pos, (x.shape[0], 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    slots = cache["k"].shape[1]
+    slot = (pos % slots) if window else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    pc = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+
+    scores = _gqa_scores(q, kc, cfg.n_kv_heads) * (hd ** -0.5)  # (B,Kv,G,1,T)
+    valid = (pc >= 0) & (pc <= pos)
+    if window is not None:
+        valid = valid & (pc > pos - window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(p, vc, cfg.n_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, dict(k=kc, v=vc, pos=pc)
+
+
+# ======================= MLA =======================
+def init_mla(ps: ParamSet, rng, cfg: ArchConfig) -> None:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    keys = jax.random.split(rng, 6)
+    ps.add("q_a", normal(keys[0], (d, rq), d ** -0.5), "embed", "lora")
+    ps.add("q_a_norm", jnp.ones((rq,), jnp.float32), "lora")
+    ps.add("q_b", normal(keys[1], (rq, h, dn + dr), rq ** -0.5),
+           "lora", "heads", None)
+    ps.add("kv_a", normal(keys[2], (d, rkv + dr), d ** -0.5), "embed", "lora")
+    ps.add("kv_a_norm", jnp.ones((rkv,), jnp.float32), "lora")
+    ps.add("kv_b", normal(keys[3], (rkv, h, dn + dv), rkv ** -0.5),
+           "lora", "heads", None)
+    ps.add("wo", normal(keys[4], (h, dv, d), (h * dv) ** -0.5),
+           "heads", None, "embed")
+
+
+def _mla_qkv_latent(params, cfg, x, positions):
+    dt = x.dtype
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    rkv = cfg.kv_lora_rank
+    cq = jnp.einsum("bsd,dr->bsr", x, params["q_a"].astype(dt))
+    cq = rmsnorm(cq, params["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["q_b"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["kv_a"].astype(dt))
+    ckv = rmsnorm(ckv_full[..., :rkv], params["kv_a_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., rkv:][:, :, None, :]  # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_attend(q, k, v, scale, qpos, kpos, causal, dt):
+    scores = jnp.einsum("bshe,bthe->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = qpos[:, :, None]
+        kj = kpos[:, None, :]
+        scores = jnp.where((kj <= qi)[:, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthe->bshe", p.astype(dt), v)
+
+
+def mla_attention(params, cfg: ArchConfig, x, positions, *,
+                  causal: bool = True) -> jax.Array:
+    dt = x.dtype
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(params, cfg, x, positions)
+    kv = jnp.einsum("bsr,rhe->bshe", ckv, params["kv_b"].astype(dt))
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (dr,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    scale = (dn + dr) ** -0.5
+    s = q.shape[1]
+    if s > ATTN_CHUNK_THRESHOLD and s % ATTN_CHUNK == 0:
+        nq = s // ATTN_CHUNK
+        qc = jnp.moveaxis(
+            q.reshape(q.shape[0], nq, ATTN_CHUNK, *q.shape[2:]), 1, 0)
+        pc = jnp.moveaxis(
+            positions.reshape(positions.shape[0], nq, ATTN_CHUNK), 1, 0)
+
+        def chunk_body(_, inp):
+            q_i, qpos_i = inp
+            return None, _mla_attend(q_i, k, v, scale, qpos_i, positions,
+                                     causal, dt)
+
+        _, out = jax.lax.scan(chunk_body, None, (qc, pc))
+        out = jnp.moveaxis(out, 0, 1).reshape(
+            q.shape[0], s, q.shape[2], dv)
+    else:
+        out = _mla_attend(q, k, v, scale, positions, positions, causal, dt)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict:
+    return dict(
+        ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        pos=jnp.full((max_len,), -1, jnp.int32),
+    )
+
+
+def mla_fill_cache(params, cfg, x, positions, cache) -> Dict:
+    _, _, ckv, k_rope = _mla_qkv_latent(params, cfg, x, positions)
+    c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, axis=1)
+    r = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, 0, axis=1)
+    p = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions[0].astype(jnp.int32), 0, axis=0)
+    return dict(ckv=c, krope=r, pos=p)
+
+
+def mla_decode(params, cfg: ArchConfig, x, pos, cache) -> Tuple[jax.Array, Dict]:
+    """Absorbed-matrix decode: scores live in latent space, the per-head
+    key/value expansion folds into q and the output projection."""
+    dt = x.dtype
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    posb = jnp.broadcast_to(pos, (x.shape[0], 1))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(params, cfg, x, posb)
+    c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, pos, axis=1)
+    r = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, pos, axis=1)
+    pc = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), pos, axis=0)
+    kv_b = params["kv_b"].astype(dt)
+    # absorb k_nope expansion into q:  q_lat = q_nope @ W_k^T  (per head)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, kv_b[..., :dn])
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, c,
+                        preferred_element_type=jnp.float32)
+    scores = scores + jnp.einsum("bshe,bte->bhst", q_rope, r,
+                                 preferred_element_type=jnp.float32)
+    scores = scores * ((dn + dr) ** -0.5)
+    valid = (pc >= 0) & (pc <= pos)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", p.astype(dt), c)
+    out = jnp.einsum("bshr,rhe->bshe", o_lat, kv_b[..., dn:])
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    return y, dict(ckv=c, krope=r, pos=pc)

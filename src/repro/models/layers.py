@@ -1,0 +1,157 @@
+"""Shared layers: params-with-specs, norms, RoPE, MLPs, embeddings.
+
+Params are plain nested dicts of jnp arrays; a parallel tree of
+PartitionSpec is built at init time through `ParamSet` so pjit
+in_shardings can be derived mechanically for any architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import spec
+
+
+class ParamSet:
+    """Collects (value, logical axes) leaves; splits into params/specs."""
+
+    def __init__(self):
+        self.values: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def add(self, name: str, value: jax.Array, *axes) -> jax.Array:
+        self.values[name] = value
+        self.specs[name] = spec(*axes)
+        return value
+
+    def sub(self, name: str, other: "ParamSet") -> None:
+        self.values[name] = other.values
+        self.specs[name] = other.specs
+
+
+def normal(rng, shape, std, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+# ------------------------- norms -------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rmsnorm(ps: ParamSet, name: str, dim: int, axis="act_embed"):
+    ps.add(name, jnp.ones((dim,), jnp.float32), axis)
+
+
+# ------------------------- RoPE -------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) — rotate pairs (d, d + D/2). positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------- MLP -------------------------
+def init_mlp(ps: ParamSet, rng, d_model: int, d_ff: int, act: str):
+    from repro.models.sharding import opt_enabled
+    k1, k2, k3 = jax.random.split(rng, 3)
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    if act == "swiglu" and opt_enabled("fused_qkv"):
+        # gate and up projections fused: one bwd dx all-reduce, not two.
+        # layout (d, 2, f): the split dim is unsharded, so selecting
+        # gate/up halves never reshards the 'model'-sharded f dim
+        ps.add("wig", normal(k1, (d_model, 2, d_ff), std_in),
+               "embed", None, "mlp")
+    else:
+        ps.add("wi", normal(k1, (d_model, d_ff), std_in), "embed", "mlp")
+        if act == "swiglu":
+            ps.add("wg", normal(k3, (d_model, d_ff), std_in),
+                   "embed", "mlp")
+    ps.add("wo", normal(k2, (d_ff, d_model), std_out), "mlp", "embed")
+
+
+def mlp(params, x: jax.Array, act: str) -> jax.Array:
+    from repro.models.sharding import fsdp_use
+    dt = x.dtype
+    if "wig" in params:
+        hg = jnp.einsum("...d,dgf->...gf", x,
+                        fsdp_use(params["wig"], "embed", None,
+                                 "mlp").astype(dt))
+        h = jax.nn.silu(hg[..., 1, :]) * hg[..., 0, :]
+    else:
+        h = jnp.einsum("...d,df->...f", x,
+                       fsdp_use(params["wi"], "embed", "mlp").astype(dt))
+        if act == "swiglu":
+            g = jnp.einsum("...d,df->...f", x,
+                           fsdp_use(params["wg"], "embed", "mlp").astype(dt))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h,
+                      fsdp_use(params["wo"], "mlp", "embed").astype(dt))
+
+
+# ------------------------- embeddings -------------------------
+def init_embed(ps: ParamSet, rng, vocab: int, d_model: int,
+               tie: bool) -> None:
+    from repro.models.sharding import opt_enabled
+    k1, k2 = jax.random.split(rng)
+    if opt_enabled("embed_dshard"):
+        # lookup table sharded on d_model ('model') and replicated over
+        # 'data': token gathers partition trivially (no vocab-shard
+        # gather fallback / full-table all-gather per step). The lm_head
+        # stays vocab-sharded so logits + CE remain 'model'-sharded.
+        ps.add("embedding", normal(k1, (vocab, d_model), 0.02),
+               None, "embed_tp")
+    else:
+        ps.add("embedding", normal(k1, (vocab, d_model), 0.02),
+               "vocab", "embed")
+    if not tie:
+        ps.add("lm_head", normal(k2, (vocab, d_model), d_model ** -0.5),
+               "vocab", "embed")
+
+
+def embed_tokens(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def lm_logits(params, x: jax.Array, tie: bool) -> jax.Array:
+    from repro.models.sharding import fsdp_use
+    table = params["embedding"] if tie else params["lm_head"]
+    table = fsdp_use(table, "vocab", None)
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  real_vocab: int = 0) -> jax.Array:
+    """Mean CE in f32; padded vocab columns are excluded via masking."""
+    logits = logits.astype(jnp.float32)
+    if real_vocab and real_vocab < logits.shape[-1]:
+        neg = jnp.full((logits.shape[-1] - real_vocab,), -1e9, jnp.float32)
+        logits = logits.at[..., real_vocab:].add(neg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,350 @@
+"""Model assembly: decoder LMs (dense / GQA / MLA / MoE / SSM / hybrid)
+and the encoder (hubert), with scan-over-layers or unrolled layouts.
+
+Public surface (all pure functions over a params pytree):
+    init(rng)                      -> (params, specs)
+    loss_fn(params, batch)         -> (loss, metrics)      [train]
+    encode(params, batch)          -> logits               [encoder]
+    prefill(params, tokens)        -> (last_logits, caches)
+    init_caches(batch, max_len)    -> caches
+    decode_step(params, tok, pos, caches) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamSet,
+    cross_entropy,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    lm_logits,
+    mlp,
+    normal,
+    rmsnorm,
+)
+from repro.models.sharding import shard, spec
+
+
+def _act_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------- layer init -------------------------
+def _init_layer(rng, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    ps = ParamSet()
+    keys = jax.random.split(rng, 4)
+    if cfg.has_attention:
+        init_rmsnorm(ps, "attn_norm", cfg.d_model)
+        sub = ParamSet()
+        if cfg.attn_type == "mla":
+            attn.init_mla(sub, keys[0], cfg)
+        else:
+            attn.init_gqa(sub, keys[0], cfg)
+        ps.sub("attn", sub)
+    if cfg.has_ssm:
+        init_rmsnorm(ps, "ssm_norm", cfg.d_model)
+        sub = ParamSet()
+        ssm_mod.init_ssm(sub, keys[1], cfg)
+        ps.sub("ssm", sub)
+    if cfg.d_ff > 0:
+        init_rmsnorm(ps, "mlp_norm", cfg.d_model)
+        sub = ParamSet()
+        if cfg.is_moe:
+            moe_mod.init_moe(sub, keys[2], cfg)
+        else:
+            init_mlp(sub, keys[2], cfg.d_model, cfg.d_ff, cfg.act)
+        ps.sub("mlp", sub)
+    return ps.values, ps.specs
+
+
+# ------------------------- block apply -------------------------
+def _block(cfg: ArchConfig, p: Dict, x: jax.Array, positions: jax.Array,
+           *, window: Optional[int], mode: str,
+           cache: Optional[Dict] = None, pos: Optional[jax.Array] = None):
+    """One transformer/ssm/hybrid block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    causal = not cfg.is_encoder
+
+    mixer_out = None
+    if cfg.has_attention and cfg.has_ssm:  # hybrid (hymba): parallel heads
+        h_in = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        if mode == "decode":
+            a_out, new_cache["attn"] = attn.gqa_decode(
+                p["attn"], cfg, h_in, pos, cache["attn"], window)
+            s_out, new_cache["ssm"] = ssm_mod.ssm_decode(
+                p["ssm"], cfg, h_in, cache["ssm"])
+        else:
+            a_out = attn.gqa_attention(p["attn"], cfg, h_in, positions,
+                                       causal=causal, window=window)
+            if mode == "prefill":
+                new_cache["attn"] = attn.gqa_fill_cache(
+                    p["attn"], cfg, h_in, positions, cache["attn"], window)
+                s_out, ssm_state = ssm_mod.ssm_forward(
+                    p["ssm"], cfg, h_in, return_state=True)
+                new_cache["ssm"] = ssm_state
+            else:
+                s_out = ssm_mod.ssm_forward(p["ssm"], cfg, h_in)
+        mixer_out = 0.5 * (a_out + s_out)
+    elif cfg.has_attention:
+        h_in = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            if mode == "decode":
+                mixer_out, new_cache["attn"] = attn.mla_decode(
+                    p["attn"], cfg, h_in, pos, cache["attn"])
+            else:
+                mixer_out = attn.mla_attention(p["attn"], cfg, h_in,
+                                               positions, causal=causal)
+                if mode == "prefill":
+                    new_cache["attn"] = attn.mla_fill_cache(
+                        p["attn"], cfg, h_in, positions, cache["attn"])
+        else:
+            if mode == "decode":
+                mixer_out, new_cache["attn"] = attn.gqa_decode(
+                    p["attn"], cfg, h_in, pos, cache["attn"], window)
+            else:
+                mixer_out = attn.gqa_attention(p["attn"], cfg, h_in,
+                                               positions, causal=causal,
+                                               window=window)
+                if mode == "prefill":
+                    new_cache["attn"] = attn.gqa_fill_cache(
+                        p["attn"], cfg, h_in, positions, cache["attn"],
+                        window)
+    elif cfg.has_ssm:  # pure SSM (mamba2)
+        h_in = rmsnorm(x, p["ssm_norm"], cfg.norm_eps)
+        if mode == "decode":
+            mixer_out, new_cache["ssm"] = ssm_mod.ssm_decode(
+                p["ssm"], cfg, h_in, cache["ssm"])
+        elif mode == "prefill":
+            mixer_out, st = ssm_mod.ssm_forward(p["ssm"], cfg, h_in,
+                                                return_state=True)
+            new_cache["ssm"] = st
+        else:
+            mixer_out = ssm_mod.ssm_forward(p["ssm"], cfg, h_in)
+
+    if mixer_out is not None:
+        x = x + mixer_out
+        x = shard(x, "batch", "seq", "act_embed")
+
+    if cfg.d_ff > 0:
+        h_in = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = moe_mod.moe_ffn(p["mlp"], cfg, h_in)
+        else:
+            y = mlp(p["mlp"], h_in, cfg.act)
+        x = x + y
+        x = shard(x, "batch", "seq", "act_embed")
+    return x, new_cache, aux
+
+
+def _layer_window(cfg: ArchConfig, idx: int) -> Optional[int]:
+    if cfg.sliding_window is None:
+        return None
+    return None if idx in cfg.global_layers else cfg.sliding_window
+
+
+# ------------------------- model -------------------------
+@dataclasses.dataclass
+class LM:
+    cfg: ArchConfig
+
+    # ---------- init ----------
+    def init(self, rng) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        ps = ParamSet()
+        k_emb, k_layers, k_front = jax.random.split(rng, 3)
+        init_embed(ps, k_emb, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings)
+        init_rmsnorm(ps, "final_norm", cfg.d_model)
+        if cfg.frontend == "audio":
+            sub = ParamSet()
+            sub.add("proj", normal(k_front, (cfg.feat_dim, cfg.d_model),
+                                   cfg.feat_dim ** -0.5), "frame", "embed")
+            ps.sub("frontend", sub)
+        params, specs = dict(ps.values), dict(ps.specs)
+
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        _, layer_spec = _init_layer(jax.random.PRNGKey(0), cfg)
+        if cfg.layout == "scan":
+            stacked = jax.vmap(
+                functools.partial(_init_layer_values, cfg=cfg))(layer_keys)
+            params["layers"] = stacked
+            specs["layers"] = jax.tree.map(
+                lambda p: _prepend_none(p), layer_spec,
+                is_leaf=_is_pspec)
+        else:
+            params["layers"] = [
+                _init_layer_values(k, cfg) for k in layer_keys]
+            specs["layers"] = [layer_spec for _ in range(cfg.n_layers)]
+        return params, specs
+
+    # ---------- train ----------
+    def loss_fn(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        if cfg.is_encoder:
+            logits = self.encode(params, batch)
+            loss = cross_entropy(logits, batch["labels"], batch["mask"],
+                                 cfg.real_vocab_size)
+            return loss, {"loss": loss}
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = self._run_layers_train(params, x, positions)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x, cfg.tie_embeddings)
+        ce = cross_entropy(logits, batch["labels"],
+                           batch.get("mask"), cfg.real_vocab_size)
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    def encode(self, params: Dict, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        feats = batch["features"].astype(_act_dtype(cfg))
+        x = jnp.einsum("btf,fd->btd", feats,
+                       params["frontend"]["proj"].astype(feats.dtype))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _ = self._run_layers_train(params, x, positions)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return lm_logits(params, x, cfg.tie_embeddings)
+
+    # ---------- serve ----------
+    def init_caches(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        dt = _act_dtype(cfg)
+
+        def one(idx: int) -> Dict:
+            c: Dict[str, Any] = {}
+            window = _layer_window(cfg, idx)
+            if cfg.has_attention:
+                if cfg.attn_type == "mla":
+                    c["attn"] = attn.init_mla_cache(cfg, batch, max_len, dt)
+                else:
+                    c["attn"] = attn.init_gqa_cache(cfg, batch, max_len,
+                                                    window, dt)
+            if cfg.has_ssm:
+                c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dt)
+            return c
+
+        if cfg.layout == "scan":
+            caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one(i) for i in range(cfg.n_layers)])
+            return caches
+        return [one(i) for i in range(cfg.n_layers)]
+
+    def prefill(self, params: Dict, tokens: jax.Array, caches: Any
+                ) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, {"tokens": tokens})
+        if cfg.layout == "scan":
+            def body(carry, xs):
+                xc = carry
+                p_l, c_l = xs
+                window = cfg.sliding_window  # scan models: uniform window
+                xc, nc, _ = _block(cfg, p_l, xc, positions, window=window,
+                                   mode="prefill", cache=c_l)
+                return xc, nc
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], caches))
+        else:
+            new_caches = []
+            for i, (p_l, c_l) in enumerate(zip(params["layers"], caches)):
+                x, nc, _ = _block(cfg, p_l, x, positions,
+                                  window=_layer_window(cfg, i),
+                                  mode="prefill", cache=c_l)
+                new_caches.append(nc)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x[:, -1:, :], cfg.tie_embeddings)
+        return logits[:, 0, :], new_caches
+
+    def decode_step(self, params: Dict, tok: jax.Array, pos: jax.Array,
+                    caches: Any) -> Tuple[jax.Array, Any]:
+        """tok: (B, 1) int32; pos: scalar int32 absolute position."""
+        cfg = self.cfg
+        x = embed_tokens(params, tok, _act_dtype(cfg))
+        x = shard(x, "batch", "seq", "act_embed")
+        positions = jnp.broadcast_to(pos, tok.shape).astype(jnp.int32)
+        if cfg.layout == "scan":
+            def body(carry, xs):
+                xc = carry
+                p_l, c_l = xs
+                xc, nc, _ = _block(cfg, p_l, xc, positions,
+                                   window=cfg.sliding_window, mode="decode",
+                                   cache=c_l, pos=pos)
+                return xc, nc
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], caches))
+        else:
+            new_caches = []
+            for i, (p_l, c_l) in enumerate(zip(params["layers"], caches)):
+                x, nc, _ = _block(cfg, p_l, x, positions,
+                                  window=_layer_window(cfg, i),
+                                  mode="decode", cache=c_l, pos=pos)
+                new_caches.append(nc)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x, cfg.tie_embeddings)
+        return logits[:, 0, :], new_caches
+
+    # ---------- internals ----------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_tokens(params, tokens, _act_dtype(cfg))
+        x = shard(x, "batch", "seq", "act_embed")
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    def _run_layers_train(self, params, x, positions):
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        if cfg.layout == "scan":
+            def body(carry, p_l):
+                xc, aux = carry
+                xc, _, a = _block(cfg, p_l, xc, positions,
+                                  window=cfg.sliding_window, mode="train")
+                return (xc, aux + a), None
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            (x, aux_total), _ = jax.lax.scan(
+                body_fn, (x, aux_total), params["layers"])
+        else:
+            for i, p_l in enumerate(params["layers"]):
+                fn = functools.partial(
+                    _block, cfg, p_l, window=_layer_window(cfg, i),
+                    mode="train")
+                if cfg.remat:
+                    fn = jax.checkpoint(
+                        lambda xc, pp=p_l, ww=_layer_window(cfg, i):
+                        _block(cfg, pp, xc, positions, window=ww,
+                               mode="train"))
+                    x, _, a = fn(x)
+                else:
+                    x, _, a = _block(cfg, p_l, x, positions,
+                                     window=_layer_window(cfg, i),
+                                     mode="train")
+                aux_total = aux_total + a
+        return x, aux_total / max(self.cfg.n_layers, 1)
+
+
+def _init_layer_values(rng, cfg: ArchConfig) -> Dict:
+    return _init_layer(rng, cfg)[0]
+
+
+def _is_pspec(x):
+    from jax.sharding import PartitionSpec
+    return isinstance(x, PartitionSpec)
+
+
+def _prepend_none(p):
+    from jax.sharding import PartitionSpec
+    return PartitionSpec(None, *tuple(p))

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-bounded index dispatch.
+
+Design (scales to the 512-chip mesh without giant one-hots):
+
+  * router: (T, E) logits -> top-k experts per token + softmax gates.
+  * dispatch: each (token, slot) pair gets its *rank within its expert*
+    via `repro.core.sort.bucket_ranks` — the same chunked one-hot prefix
+    machinery as the paper's radix sort (LGRASS §3.3), reused as the MoE
+    combiner. Tokens beyond capacity C = ceil(T·k·cf / E) are dropped
+    (standard GShard-style drop policy).
+  * compute: gather (E, C, d) -> batched expert einsum -> scatter-add.
+
+Sharding: experts are laid out on the 'model' axis; tokens are sharded on
+('pod','data') and *replicated* over 'model' (same as dense TP), so expert
+compute needs no all-to-all — each model shard computes its experts'
+contribution and the psum at the end is the same collective a dense TP
+FFN already pays. Expert weights: (E, d, f) sharded P('model','data',·).
+
+Padded experts (granite 40 -> 48) are masked to -inf in the router.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.sort import bucket_ranks
+from repro.models.layers import ParamSet, normal
+from repro.models.sharding import fsdp_use, shard
+
+
+def init_moe(ps: ParamSet, rng, cfg: ArchConfig) -> None:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    ps.add("router", normal(k1, (d, e), d ** -0.5), "embed", None)
+    ps.add("wi", normal(k2, (e, d, f), d ** -0.5),
+           "experts", "embed", "expert_mlp")
+    if cfg.act == "swiglu":
+        ps.add("wg", normal(k4, (e, d, f), d ** -0.5),
+               "experts", "embed", "expert_mlp")
+    ps.add("wo", normal(k3, (e, f, d), f ** -0.5),
+           "experts", "expert_mlp", "embed")
+
+
+def _capacity(t: int, k: int, e: int, cf: float) -> int:
+    c = int(t * k * cf / e) + 1
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_ffn(params: Dict, cfg: ArchConfig, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch is *per sequence* (GShard groups == batch rows): every gather
+    and scatter indexes along S only, so the batch dimension stays aligned
+    with its ('pod','data') shards and no cross-shard collective is
+    generated; experts stay sharded on 'model'.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if cfg.real_n_experts and cfg.real_n_experts < e:
+        pad_mask = jnp.arange(e) >= cfg.real_n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    gates_all = jax.nn.softmax(logits, axis=-1)               # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(gates_all, k)       # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(gates_all, axis=(0, 1))
+    frac = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (b * s * k))
+    aux = cfg.router_aux_coef * e * jnp.sum(density * frac)
+
+    cap = _capacity(s, k, e, cfg.capacity_factor)
+    flat_e = expert_idx.reshape(b, s * k)                     # (B, S*k)
+    pos_in_e = jax.vmap(lambda fe: bucket_ranks(fe, e))(flat_e)
+    keep = pos_in_e < cap
+    # (B, E, C) token table; dropped pairs scatter out-of-bounds; empty
+    # slots point at row S (zero pad)
+    tok_of_slot = jnp.full((b, e, cap), s, jnp.int32)
+    slot_e = jnp.where(keep, flat_e, e)      # e is out of bounds -> dropped
+    slot_c = jnp.where(keep, pos_in_e, 0)
+    token_ids = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None], (b, s * k))
+    barange = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+    tok_of_slot = tok_of_slot.at[barange, slot_e, slot_c].set(
+        token_ids, mode="drop")
+    gate_of_slot = jnp.zeros((b, e, cap), jnp.float32).at[
+        barange, slot_e, slot_c].set(gate_vals.reshape(b, s * k),
+                                     mode="drop")
+
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), dt)], axis=1)
+    xe = jnp.take_along_axis(
+        xpad[:, :, None, :],
+        tok_of_slot.reshape(b, e * cap)[:, :, None, None], axis=1
+    ).reshape(b, e, cap, d)
+    xe = shard(xe, "batch", "experts", None, None)
+    h = jnp.einsum("becd,edf->becf", xe,
+                   fsdp_use(params["wi"], "experts", None,
+                            "expert_mlp").astype(dt))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xe,
+                       fsdp_use(params["wg"], "experts", None,
+                                "expert_mlp").astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("becf,efd->becd", h,
+                    fsdp_use(params["wo"], "experts",
+                             "expert_mlp", None).astype(dt))
+    ye = ye * gate_of_slot[..., None].astype(dt)
+
+    y = jnp.zeros((b, s + 1, d), dt).at[
+        jnp.arange(b)[:, None], tok_of_slot.reshape(b, e * cap)].add(
+        ye.reshape(b, e * cap, d))
+    return y[:, :s], aux

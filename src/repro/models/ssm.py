@@ -1,0 +1,225 @@
+"""Mamba2 / SSD layer (arXiv:2405.21060) — chunked train/prefill + O(1)
+recurrent decode.
+
+The SSD (state-space duality) form splits the sequence into chunks of Q:
+inside a chunk the recurrence is evaluated as a masked attention-like
+matmul (MXU-friendly quadratic-in-Q), across chunks a tiny recurrence
+carries the (H, P, N) state — a lax.scan over S/Q steps. This is the
+TPU-native layout: all heavy ops are dense einsums over
+(chunk, heads, headdim, state).
+
+Decode keeps state (B, H, P, N) and a rolling conv window — O(1) per token,
+which is why mamba2/hymba are the long_500k-capable architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamSet, normal, rmsnorm
+from repro.models.sharding import fsdp_use, shard
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    h, p = cfg.ssm_nheads, cfg.ssm_headdim
+    conv_dim = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + h
+    return di, g, n, h, p, conv_dim, d_in_proj
+
+
+def init_ssm(ps: ParamSet, rng, cfg: ArchConfig) -> None:
+    d = cfg.d_model
+    di, g, n, h, p, conv_dim, d_in_proj = _dims(cfg)
+    keys = jax.random.split(rng, 4)
+    h_axis = "ssm_heads" if h % 16 == 0 else "ssm_heads_rep"
+    ps.add("in_proj", normal(keys[0], (d, d_in_proj), d ** -0.5),
+           "embed", "ssm_inner" if h % 16 == 0 else None)
+    ps.add("conv_w", normal(keys[1], (cfg.ssm_conv, conv_dim), 0.1),
+           "conv", None)
+    ps.add("conv_b", jnp.zeros((conv_dim,), jnp.float32), None)
+    # A in [-1, -e]; dt bias ~ softplus^-1 of [1e-3, 1e-1] range
+    ps.add("A_log", jnp.log(jnp.linspace(1.0, jnp.e, h, dtype=jnp.float32)),
+           h_axis)
+    ps.add("D", jnp.ones((h,), jnp.float32), h_axis)
+    ps.add("dt_bias", jnp.full((h,), -2.0, jnp.float32), h_axis)
+    ps.add("norm", jnp.ones((di,), jnp.float32), None)
+    ps.add("out_proj", normal(keys[2], (di, d), di ** -0.5),
+           "ssm_inner" if h % 16 == 0 else None, "embed")
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, g, n, h, p, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv, width K. carry: (B, K-1, C) previous inputs."""
+    k = conv_w.shape[0]
+    if carry is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = carry.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + full[:, i: i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+    out = out + conv_b.astype(xbc.dtype)
+    new_carry = full[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_carry
+
+
+def _ssd_chunked(xh, bm, cm, dt, a, chunk: int, h_axis=None):
+    """SSD over chunks.
+
+    xh: (B,S,H,P)  bm/cm: (B,S,G,N)  dt: (B,S,H)  a: (H,) negative.
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+
+    h_axis: logical axis for the SSD head dim ('ssm_heads' when divisible
+    by the TP extent) — constraining it keeps the (B,nc,q,q,H) intra-chunk
+    tensors sharded 16-way instead of replicated.
+    """
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = chunk
+    s_orig = s
+    if s % q != 0:
+        # pad to a chunk multiple with dt=0 steps: decay=exp(0)=1 and the
+        # update term carries dt=0, so the final state is unaffected.
+        pad = q - s % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+    rep = h // g
+
+    def r4(t):  # (B,S,...) -> (B,nc,q,...)
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    xh_, bm_, cm_, dtc = r4(xh), r4(bm), r4(cm), r4(dt)
+    bmh = jnp.repeat(bm_, rep, axis=3)                   # (B,nc,q,H,N)
+    cmh = jnp.repeat(cm_, rep, axis=3)
+    if h_axis:
+        xh_ = shard(xh_, "batch", None, None, h_axis, None)
+        bmh = shard(bmh, "batch", None, None, h_axis, None)
+        cmh = shard(cmh, "batch", None, None, h_axis, None)
+        dtc = shard(dtc, "batch", None, None, h_axis)
+    da = dtc * a.astype(dtc.dtype)                       # (B,nc,q,H)
+    da_cs = jnp.cumsum(da, axis=2)                       # inclusive
+    da_tot = da_cs[:, :, -1:, :]                         # (B,nc,1,H)
+
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cs_i - cs_j) dt_j x_j
+    decay = jnp.exp(da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)  # (B,nc,q,q,H)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cmh, bmh,
+                    preferred_element_type=jnp.float32)          # (B,nc,q,q,H)
+    w = cb * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(xh_.dtype), xh_)
+
+    # chunk summary states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    sdecay = jnp.exp(da_tot - da_cs)                             # (B,nc,q,H)
+    xw = xh_ * (sdecay * dtc)[..., None].astype(xh_.dtype)
+    chunk_states = jnp.einsum("bcjhn,bcjhp->bchpn", bmh, xw)
+
+    # inter-chunk recurrence (tiny): S_c' = S_{c-1}' * exp(da_tot_c) + S_c
+    da_tot_c = da_tot[:, :, 0, :]                                # (B,nc,H)
+
+    def step(carry, inp):
+        st, dtot = inp
+        new = carry * jnp.exp(dtot)[:, :, None, None].astype(carry.dtype) + st
+        return new, carry  # emit state *before* this chunk
+
+    init = jnp.zeros((b, h, p, n), xh.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(da_tot_c, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_i += C_i . S_prev * exp(cs_i)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", cmh, prev_states)
+    y_inter = y_inter * jnp.exp(da_cs)[..., None].astype(y_inter.dtype)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], final
+
+
+def ssm_forward(params: Dict, cfg: ArchConfig, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence SSD (train / prefill). x: (B,S,d)."""
+    dt_ = x.dtype
+    di, g, n, h, p, conv_dim, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x,
+                        fsdp_use(params["in_proj"], "embed",
+                                 None).astype(dt_))
+    z, xbc, dtr = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_carry = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di]
+    bm = xbc[..., di: di + g * n].reshape(*xbc.shape[:2], g, n)
+    cm = xbc[..., di + g * n:].reshape(*xbc.shape[:2], g, n)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], h, p)
+    h_axis = "ssm_heads" if h % 16 == 0 else None
+    y, state = _ssd_chunked(xh, bm, cm, dt, a, cfg.ssm_chunk, h_axis=h_axis)
+    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*y.shape[:2], di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y,
+                     fsdp_use(params["out_proj"], None,
+                              "embed").astype(dt_))
+    if return_state:
+        return out, dict(state=state, conv=conv_carry)
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    di, g, n, h, p, conv_dim, _ = _dims(cfg)
+    return dict(
+        state=jnp.zeros((batch, h, p, n), dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )
+
+
+def ssm_decode(params: Dict, cfg: ArchConfig, x: jax.Array,
+               cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent update. x: (B,1,d)."""
+    dt_ = x.dtype
+    di, g, n, h, p, conv_dim, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x,
+                        fsdp_use(params["in_proj"], "embed",
+                                 None).astype(dt_))
+    z, xbc, dtr = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_carry = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], carry=cache["conv"])
+    xs = xbc[..., :di]
+    bm = xbc[..., di: di + g * n].reshape(xbc.shape[0], g, n)
+    cm = xbc[..., di + g * n:].reshape(xbc.shape[0], g, n)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)[:, 0] +
+                         params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(xs.shape[0], h, p)
+    bmh = jnp.repeat(bm, h // g, axis=1)                 # (B,H,N)
+    cmh = jnp.repeat(cm, h // g, axis=1)
+    decay = jnp.exp(dt * a[None, :])                       # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhpn", bmh, xh * dt[..., None].astype(xh.dtype))
+    state = cache["state"] * decay[:, :, None, None].astype(xh.dtype) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, cmh)
+    y = y + xh * params["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(y.shape[0], 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y,
+                     fsdp_use(params["out_proj"], None,
+                              "embed").astype(dt_))
+    return out, dict(state=state, conv=conv_carry)

@@ -1,0 +1,75 @@
+"""Gradient compression for cross-pod reduction (distributed-opt tricks).
+
+Two composable schemes, both with error feedback so compression error is
+re-injected next step instead of lost:
+
+  * top-k sparsification (keep the largest |g| fraction per tensor);
+  * int8 row-wise quantisation (absmax scaling).
+
+On a real multi-pod deployment the compress happens *before* the slow
+cross-pod ('pod' axis) all-reduce and decompress after — `compressed_psum`
+shows the shard_map form. Inside a single XLA program the intra-pod
+reduction stays full precision (ICI is cheap); only the DCN hop is
+compressed, matching standard hierarchical-allreduce practice.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g: jax.Array, frac: float, err: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Keep top `frac` of entries (by |value|) of g + err; rest feeds err."""
+    acc = g.astype(jnp.float32) + err
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(acc) >= thresh
+    sent = jnp.where(mask, acc, 0.0)
+    new_err = acc - sent
+    return sent.astype(g.dtype), new_err
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise absmax int8. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    flat = g32.reshape(g32.shape[0], -1) if g32.ndim > 1 else g32[None, :]
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def int8_roundtrip(g: jax.Array, err: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    acc = g.astype(jnp.float32) + err
+    q, s = int8_quantize(acc)
+    deq = int8_dequantize(q, s, acc.shape)
+    return deq.astype(g.dtype), acc - deq
+
+
+def compressed_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce over `axis_name` (use inside shard_map).
+
+    Every participant first agrees on a global absmax scale (one scalar
+    psum — negligible), quantises its local contribution to int8 with
+    that shared scale, and the int32 sum is dequantised once. Wire bytes
+    drop 4x vs f32 / 2x vs bf16 for the payload hop (the scheme used on
+    the slow cross-pod 'pod' axis)."""
+    g32 = g.astype(jnp.float32)
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name)
+    scale = jnp.maximum(gmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int32)
+    qsum = jax.lax.psum(q, axis_name)
+    return qsum.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

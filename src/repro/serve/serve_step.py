@@ -1,0 +1,46 @@
+"""Serving steps: batched prefill and single-token decode with persistent
+caches (KV / latent / SSM state). These are the units the decode-shape
+dry-run cells lower (`decode_*` / `long_*` lower serve_step, not
+train_step, per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, tokens: jax.Array, caches: Any):
+        logits, caches = model.prefill(params, tokens, caches)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(model: LM):
+    def decode_step(params, tok: jax.Array, pos: jax.Array, caches: Any):
+        logits, caches = model.decode_step(params, tok, pos, caches)
+        # greedy next token (sampling handled by the server loop)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, caches
+    return decode_step
+
+
+def generate(model: LM, params, prompt: jax.Array, max_new: int,
+             max_len: int) -> jax.Array:
+    """Simple greedy generation loop (example/server use, jit per step)."""
+    b, s = prompt.shape
+    caches = model.init_caches(b, max_len)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(3,))
+    logits, caches = prefill(params, prompt, caches)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    for i in range(max_new - 1):
+        tok, _, caches = decode(params, tok, jnp.int32(s + i), caches)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,147 @@
+"""Training step: loss -> grads -> AdamW, with microbatch gradient
+accumulation (lax.scan) and optional gradient compression w/ error
+feedback. The step is one jit-compiled pure function over a TrainState
+dict — the unit the dry-run lowers at 512 devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim import compression as comp
+from repro.optim.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_train_state(model: LM, rng) -> Dict:
+    params, _ = model.init(rng)
+    state = dict(params=params, opt=init_opt_state(params))
+    return state
+
+
+def make_train_state_specs(model: LM) -> Dict:
+    """PartitionSpec tree matching make_train_state (moments = params)."""
+    from jax.sharding import PartitionSpec as P
+    specs_holder = {}
+
+    def f(rng):
+        params, specs = model.init(rng)
+        specs_holder["s"] = specs
+        return params
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    pspecs = specs_holder["s"]
+    return dict(
+        params=pspecs,
+        opt=dict(mu=pspecs, nu=pspecs, step=P()),
+    )
+
+
+def _split_microbatches(batch: Dict, k: int) -> Dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by micro {k}"
+        return x.reshape((k, b // k) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    model: LM,
+    opt_cfg: OptConfig,
+    micro_batches: int = 1,
+    compress: Optional[str] = None,   # None | 'topk' | 'int8'
+    topk_frac: float = 0.01,
+    grad_shard_specs: Optional[Dict] = None,
+    grad_sync_dtype: Optional[str] = None,  # e.g. 'bfloat16' (§Perf)
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_shard_specs: optional PartitionSpec tree matching params. When
+    set, each microbatch's gradients are constrained to the *param*
+    sharding inside the accumulation scan, so XLA emits one
+    reduce-scatter per microbatch into a ZeRO-sharded accumulator
+    instead of all-reducing full replicated gradients (≈2x less grad
+    wire traffic; the accumulator is FSDP-sharded rather than
+    replicated). §Perf opt 'grad_shard_accum'.
+    """
+
+    def loss_of(params, mb):
+        loss, metrics = model.loss_fn(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def _constrain(grads):
+        if grad_shard_specs is None:
+            return grads
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.ft.elastic import resolve_spec_for_mesh
+        from repro.models.sharding import current_mesh
+        mesh = current_mesh()
+        if mesh is None:
+            return grads
+        return jax.tree.map(
+            lambda g, p: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, resolve_spec_for_mesh(p, mesh))),
+            grads, grad_shard_specs,
+            is_leaf=lambda x: not isinstance(x, (dict, list)))
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        if micro_batches > 1:
+            mbs = _split_microbatches(batch, micro_batches)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                if grad_sync_dtype:
+                    # cross-device reduction in bf16 halves grad wire
+                    # bytes; accumulation stays f32 (upcast add)
+                    grads = jax.tree.map(
+                        lambda g: g.astype(grad_sync_dtype), grads)
+                grads = _constrain(grads)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), gacc, grads)
+                return (gacc, lacc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            g0 = _constrain(g0)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0.0)),
+                                           mbs)
+            grads = jax.tree.map(lambda g: g / micro_batches, gsum)
+            loss = lsum / micro_batches
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+            grads = _constrain(grads)
+
+        if compress == "topk":
+            errs = state["err"]
+            out = jax.tree.map(
+                lambda g, e: comp.topk_compress(g, topk_frac, e),
+                grads, errs)
+            grads = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_err = jax.tree.map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        elif compress == "int8":
+            errs = state["err"]
+            out = jax.tree.map(lambda g, e: comp.int8_roundtrip(g, e),
+                               grads, errs)
+            grads = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_err = jax.tree.map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+
+        new_params, new_opt, om = adamw_update(params, grads,
+                                               state["opt"], opt_cfg)
+        new_state = dict(params=new_params, opt=new_opt)
+        if compress:
+            new_state["err"] = new_err
+        metrics = dict(loss=loss, **om)
+        return new_state, metrics
+
+    return train_step

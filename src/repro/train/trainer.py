@@ -1,0 +1,106 @@
+"""Trainer: the fault-tolerant loop (checkpoint/restart, straggler
+monitoring, deterministic data resume). One class, pure-step inside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.ft.elastic import FailureInjector, FaultConfig, StragglerMonitor
+from repro.models.model import LM
+from repro.optim.optimizer import OptConfig
+from repro.train.train_step import make_train_state, make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    micro_batches: int = 1
+    compress: Optional[str] = None
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: LM, data: TokenPipeline, opt_cfg: OptConfig,
+                 tcfg: TrainerConfig, ckpt_dir: str,
+                 fault_cfg: Optional[FaultConfig] = None,
+                 failure_injector: Optional[FailureInjector] = None):
+        self.model = model
+        self.data = data
+        self.tcfg = tcfg
+        self.fault_cfg = fault_cfg or FaultConfig()
+        self.ckpt = Checkpointer(ckpt_dir)
+        self.monitor = StragglerMonitor(self.fault_cfg)
+        self.injector = failure_injector
+        self.step_fn = jax.jit(
+            make_train_step(model, opt_cfg,
+                            micro_batches=tcfg.micro_batches,
+                            compress=tcfg.compress),
+            donate_argnums=(0,))
+        self.restarts = 0
+        self.history: list = []
+
+    def _fresh_state(self):
+        state = make_train_state(self.model, jax.random.PRNGKey(
+            self.tcfg.seed))
+        if self.tcfg.compress:
+            from repro.optim.compression import init_error_state
+            state["err"] = init_error_state(state["params"])
+        return state
+
+    def _try_restore(self, state):
+        last = self.ckpt.latest_step()
+        if last is None:
+            return state, 0
+        template = jax.tree.map(np.asarray, jax.device_get(state))
+        restored = self.ckpt.restore(last, template)
+        log.info("restored checkpoint at step %d", last)
+        return jax.tree.map(jax.numpy.asarray, restored), last
+
+    def run(self) -> Dict:
+        state = self._fresh_state()
+        state, start = self._try_restore(state)
+        step = start
+        while step < self.tcfg.total_steps:
+            try:
+                batch = self.data.batch(step)  # deterministic in step
+                if self.injector is not None:
+                    self.injector.check(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self.monitor.observe(step, dt):
+                    log.warning("straggler at step %d: %.3fs (ewma %.3fs)",
+                                step, dt, self.monitor.ewma)
+                self.history.append(dict(step=step, loss=loss, dt=dt))
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.1f ms)",
+                             step, loss, dt * 1e3)
+                step += 1
+                if step % self.fault_cfg.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except Exception as e:  # node failure -> restart from ckpt
+                self.restarts += 1
+                if self.restarts > self.fault_cfg.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restart %d/%d",
+                            step, e, self.restarts,
+                            self.fault_cfg.max_restarts)
+                state = self._fresh_state()
+                state, step = self._try_restore(state)
+        self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return dict(state=state, history=self.history,
+                    restarts=self.restarts,
+                    stragglers=len(self.monitor.events))

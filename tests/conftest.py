@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests see exactly one device unless a test spawns its own subprocess
+# with XLA_FLAGS (the dry-run needs 512 placeholder devices; smoke tests
+# must NOT).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

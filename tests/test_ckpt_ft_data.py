@@ -1,0 +1,115 @@
+"""Checkpoint/restore, fault-tolerant trainer (restart + straggler), data
+pipeline determinism."""
+import logging
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.ft.elastic import (FailureInjector, FaultConfig,
+                              StragglerMonitor, resolve_spec_for_mesh)
+from repro.models.model import LM
+from repro.optim.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    state = {"a": jnp.arange(6).reshape(2, 3),
+             "nested": {"b": jnp.ones((4,)) * 2.5},
+             "lst": [jnp.zeros((2,)), jnp.ones((2,))]}
+    ck.save(3, state)
+    assert ck.latest_step() == 3
+    got = ck.restore(3, jax.device_get(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.full((3,), s)})
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+
+
+def test_data_determinism():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b1 = p1.batch(5)
+    b2 = p2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = p1.batch(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # labels are next-token shifted
+    # (tokens[t+1] == labels[t] by construction)
+    raw1 = p1._host_batch(5)
+    np.testing.assert_array_equal(raw1["tokens"][:, 1:],
+                                  raw1["labels"][:, :-1])
+
+
+def _mk_trainer(tmp_path, fail_steps=(), total=12, ckpt_every=4,
+                seq_len=16, batch=4, lr=5e-3):
+    cfg = ARCHS["phi3-mini-3.8b"].reduced()
+    model = LM(cfg)
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=seq_len,
+                                    global_batch=batch, seed=1))
+    return Trainer(
+        model, data,
+        OptConfig(peak_lr=lr, warmup_steps=3, total_steps=total),
+        TrainerConfig(total_steps=total, log_every=100),
+        str(tmp_path),
+        fault_cfg=FaultConfig(ckpt_every=ckpt_every, max_restarts=3),
+        failure_injector=FailureInjector(fail_steps),
+    )
+
+
+def test_trainer_loss_decreases(tmp_path):
+    t = _mk_trainer(tmp_path, total=40, ckpt_every=50, seq_len=32,
+                    batch=8, lr=1e-2)
+    out = t.run()
+    losses = [h["loss"] for h in out["history"]]
+    assert len(losses) == 40
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert out["restarts"] == 0
+
+
+def test_trainer_restarts_from_checkpoint(tmp_path):
+    t = _mk_trainer(tmp_path, fail_steps=(9,), total=12, ckpt_every=4)
+    out = t.run()
+    assert out["restarts"] == 1
+    steps = [h["step"] for h in out["history"]]
+    # after failing at 9 it restarted from ckpt step 8 and replayed 8..11
+    assert steps.count(8) >= 1
+    assert steps[-1] == 11
+    # deterministic data => replayed steps compute identical losses
+    by_step = {}
+    for h in out["history"]:
+        by_step.setdefault(h["step"], []).append(h["loss"])
+    for s, ls in by_step.items():
+        if len(ls) > 1:
+            assert abs(ls[0] - ls[1]) < 1e-4
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(FaultConfig(straggler_factor=3.0))
+    flags = [mon.observe(i, 0.1) for i in range(10)]
+    assert not any(flags)
+    assert mon.observe(10, 1.0)  # 10x the EWMA -> straggler
+    assert len(mon.events) == 1
+
+
+def test_resolve_spec_for_mesh():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    p = resolve_spec_for_mesh(P(("pod", "data"), None, "model"), mesh)
+    assert p == P(("data",), None, None)

@@ -1,0 +1,107 @@
+"""Per-kernel Pallas tests: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles in ref.py (interpret=True executes the kernel body on
+CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk_qkv(rng, b, s, h, kv, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), dtype)
+    return q, k, v
+
+
+def _ref_out(q, k, v, causal, window):
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    o = ref.flash_attention_ref(qb, kb, vb, pos, pos, causal=causal,
+                                window=window)
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("s,d,h,kv", [
+    (256, 64, 4, 4),
+    (256, 128, 4, 2),   # GQA
+    (512, 64, 2, 1),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(s, d, h, kv, causal):
+    rng = np.random.default_rng(s + d)
+    q, k, v = _mk_qkv(rng, 2, s, h, kv, d, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = _ref_out(q, k, v, causal, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_window():
+    rng = np.random.default_rng(7)
+    q, k, v = _mk_qkv(rng, 1, 384, 2, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=100,
+                              interpret=True)
+    want = _ref_out(q, k, v, True, 100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(8)
+    q, k, v = _mk_qkv(rng, 1, 256, 2, 2, 64, jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = _ref_out(q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), True, None)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_block_sweep():
+    rng = np.random.default_rng(9)
+    q, k, v = _mk_qkv(rng, 1, 512, 2, 2, 64, jnp.float32)
+    want = _ref_out(q, k, v, True, None)
+    for bq, bk in [(128, 128), (256, 128), (128, 256), (64, 64)]:
+        out = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5,
+                                   err_msg=f"blocks {bq}x{bk}")
+
+
+@pytest.mark.parametrize("n", [512, 1024, 4096, 5000])
+def test_radix_hist_kernel(n):
+    rng = np.random.default_rng(n)
+    d = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    rank, hist = ops.bucket_rank_hist(d, interpret=True)
+    rr, hr = ref.bucket_rank_hist_ref(d)
+    assert np.array_equal(np.asarray(rank), np.asarray(rr))
+    assert np.array_equal(np.asarray(hist), np.asarray(hr))
+
+
+def test_radix_argsort_kernel_matches_core():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 2 ** 32, 3000, dtype=np.uint32))
+    perm = ops.radix_argsort_u32(keys, interpret=True)
+    srt = np.asarray(keys)[np.asarray(perm)]
+    assert np.array_equal(srt, np.sort(np.asarray(keys)))
+
+
+@pytest.mark.parametrize("l,w", [(100, 1), (1024, 2), (2000, 4)])
+def test_bitmap_intersect(l, w):
+    rng = np.random.default_rng(l + w)
+    m1 = jnp.asarray(rng.integers(0, 2 ** 32, (l, w), dtype=np.uint32))
+    m2 = jnp.asarray((rng.integers(0, 2 ** 32, (l, w), dtype=np.uint32)
+                      * (rng.random((l, w)) < 0.2)).astype(np.uint32))
+    out = ops.bitmap_intersect_any(m1, m2, interpret=True)
+    want = ref.bitmap_intersect_any_ref(m1, m2)
+    assert np.array_equal(np.asarray(out), np.asarray(want))

@@ -1,0 +1,85 @@
+"""Optimizer + gradient compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import compression as comp
+from repro.optim.optimizer import (OptConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state,
+                                   lr_schedule)
+
+
+def _np_adamw(p, g, m, v, step, cfg):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** step)
+    vh = v / (1 - cfg.b2 ** step)
+    lr = cfg.peak_lr * step / cfg.warmup_steps if step < cfg.warmup_steps \
+        else None
+    return m, v, mh, vh
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=1000, total_steps=2000,
+                    weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]], jnp.float32)}
+    grads = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.4]], jnp.float32)}
+    state = init_opt_state(params)
+    newp, newstate, m = adamw_update(params, grads, state, cfg)
+    g = np.asarray(grads["w"])
+    mm, vv, mh, vh = _np_adamw(np.asarray(params["w"]), g,
+                               np.zeros((2, 2)), np.zeros((2, 2)), 1, cfg)
+    lr = 1e-2 * 1 / 1000
+    want = np.asarray(params["w"]) - lr * mh / (np.sqrt(vh) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(newstate["mu"]["w"]), mm,
+                               rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 6.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]),
+                               np.ones(4) * 0.5, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == 0.5
+    assert abs(lrs[2] - 1.0) < 0.05
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-3  # decays to 10%
+
+
+def test_topk_error_feedback_unbiased_over_time():
+    """With error feedback, sum of compressed grads ~= sum of true grads."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros((100,), jnp.float32)
+    total_sent, total_true = np.zeros(100), np.zeros(100)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(100), jnp.float32)
+        sent, err = comp.topk_compress(g, 0.1, err)
+        total_sent += np.asarray(sent)
+        total_true += np.asarray(g)
+    resid = np.abs(total_sent - total_true).max()
+    assert resid < 10.0  # bounded by max |err| (not growing with steps)
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    q, s = comp.int8_quantize(g)
+    deq = comp.int8_dequantize(q, s, g.shape)
+    err = np.abs(np.asarray(g) - deq).max()
+    assert err <= float(np.abs(np.asarray(g)).max()) / 127.0 + 1e-6
+
+
+def test_int8_ef_state():
+    g = jnp.asarray([[1.0, -0.003, 2.0]], jnp.float32)
+    sent, err = comp.int8_roundtrip(g, jnp.zeros_like(g))
+    np.testing.assert_allclose(np.asarray(sent) + np.asarray(err),
+                               np.asarray(g), atol=1e-6)

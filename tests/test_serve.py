@@ -1,0 +1,71 @@
+"""Serving correctness: prefill + decode == full forward logits for every
+cache family (GQA full, GQA ring window, MLA latent, SSM state, hybrid)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.layers import lm_logits, rmsnorm
+from repro.models.model import LM
+from repro.serve.serve_step import generate
+
+DECODER_ARCHS = ["phi3-mini-3.8b", "minicpm3-4b", "mamba2-370m",
+                 "hymba-1.5b", "dbrx-132b", "starcoder2-15b"]
+
+
+def _full_logits(m, params, tokens):
+    x, positions = m._embed_inputs(params, {"tokens": tokens})
+    x, _ = m._run_layers_train(params, x, positions)
+    x = rmsnorm(x, params["final_norm"], m.cfg.norm_eps)
+    return lm_logits(params, x, m.cfg.tie_embeddings)
+
+
+@pytest.mark.parametrize("name", DECODER_ARCHS)
+def test_decode_matches_full_forward(name):
+    cfg = ARCHS[name].reduced()
+    m = LM(cfg)
+    params, _ = m.init(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    ref = _full_logits(m, params, toks)[:, -1, :]
+    caches = m.init_caches(B, 64)
+    _, caches = m.prefill(params, toks[:, : S - 3], caches)
+    lg = None
+    for i in range(S - 3, S):
+        lg, caches = m.decode_step(params, toks[:, i: i + 1],
+                                   jnp.int32(i), caches)
+    err = float(jnp.max(jnp.abs(ref - lg)))
+    assert err < 5e-5, f"{name}: {err}"
+
+
+def test_window_ring_cache_beyond_window():
+    """Decode far past the sliding window: ring buffer must agree with the
+    full-forward windowed attention."""
+    cfg = ARCHS["hymba-1.5b"].reduced()  # window 16, global layer 0
+    m = LM(cfg)
+    params, _ = m.init(jax.random.PRNGKey(2))
+    B, S = 1, 40  # > 2x window
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    ref = _full_logits(m, params, toks)[:, -1, :]
+    caches = m.init_caches(B, 64)
+    _, caches = m.prefill(params, toks[:, :8], caches)
+    lg = None
+    for i in range(8, S):
+        lg, caches = m.decode_step(params, toks[:, i: i + 1],
+                                   jnp.int32(i), caches)
+    err = float(jnp.max(jnp.abs(ref - lg)))
+    assert err < 5e-5, err
+
+
+def test_greedy_generate_runs():
+    cfg = ARCHS["phi3-mini-3.8b"].reduced()
+    m = LM(cfg)
+    params, _ = m.init(jax.random.PRNGKey(3))
+    prompt = jnp.zeros((2, 8), jnp.int32)
+    out = generate(m, params, prompt, max_new=5, max_len=32)
+    assert out.shape == (2, 5)
+    assert np.all((np.asarray(out) >= 0) &
+                  (np.asarray(out) < cfg.vocab_size))

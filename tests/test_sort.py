@@ -1,0 +1,79 @@
+"""Radix sort (LGRASS §3.3): linearity-preserving IEEE-754 key trick,
+stability, and equivalence with numpy sorts."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sort import (
+    bucket_ranks,
+    float32_sort_key,
+    radix_argsort_u32,
+    radix_argsort_u64pair,
+    sort_f32_desc_stable,
+)
+
+
+def test_float_key_monotone():
+    xs = np.array([0.0, 1e-38, 0.5, 1.0, 3.14, 1e30, -1.0, -0.5, -1e30],
+                  np.float32)
+    keys = np.asarray(float32_sort_key(jnp.asarray(xs)))
+    order_f = np.argsort(xs, kind="stable")
+    order_k = np.argsort(keys, kind="stable")
+    assert np.array_equal(xs[order_f], xs[order_k])
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 1024, 5000])
+def test_radix_u32_matches_numpy(n):
+    rng = np.random.default_rng(n)
+    keys = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys)))
+    assert np.array_equal(keys[perm], np.sort(keys))
+
+
+def test_radix_u32_stable():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 4, 2000, dtype=np.uint32)  # heavy ties
+    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys)))
+    ref = np.argsort(keys, kind="stable")
+    assert np.array_equal(perm, ref)
+
+
+def test_radix_u64pair():
+    rng = np.random.default_rng(1)
+    hi = rng.integers(0, 3, 1500, dtype=np.uint32)
+    lo = rng.integers(0, 2 ** 32, 1500, dtype=np.uint32)
+    perm = np.asarray(radix_argsort_u64pair(jnp.asarray(hi), jnp.asarray(lo)))
+    key = hi.astype(np.uint64) << np.uint64(32) | lo.astype(np.uint64)
+    assert np.array_equal(perm, np.argsort(key, kind="stable"))
+
+
+def test_desc_stable():
+    keys = np.array([1.0, 3.0, 3.0, 0.5, 3.0, 2.0], np.float32)
+    perm = np.asarray(sort_f32_desc_stable(jnp.asarray(keys)))
+    assert perm.tolist() == [1, 2, 4, 5, 0, 3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0, max_value=1e6, width=32),
+                min_size=1, max_size=300))
+def test_desc_stable_property(xs):
+    keys = np.array(xs, np.float32)
+    perm = np.asarray(sort_f32_desc_stable(jnp.asarray(keys)))
+    srt = keys[perm]
+    assert np.all(np.diff(srt) <= 0)  # descending
+    # stability: equal keys keep index order
+    for i in range(len(perm) - 1):
+        if srt[i] == srt[i + 1]:
+            assert perm[i] < perm[i + 1]
+
+
+@pytest.mark.parametrize("nb", [4, 16, 256])
+def test_bucket_ranks(nb):
+    rng = np.random.default_rng(nb)
+    keys = rng.integers(0, nb, 4000)
+    ranks = np.asarray(bucket_ranks(jnp.asarray(keys, jnp.int32), nb))
+    seen = {}
+    for i, k in enumerate(keys):
+        assert ranks[i] == seen.get(k, 0)
+        seen[k] = seen.get(k, 0) + 1

@@ -8,11 +8,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small sizes (CI)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table3,table2,fig5,kernels,roofline")
+                    help="comma list: table3,table2,fig5,kernels,roofline,"
+                         "batch")
     args = ap.parse_args()
 
-    from benchmarks import (bench_kernels, fig5_linearity, roofline,
-                            table2_breakdown, table3_execution_time)
+    from benchmarks import (bench_batch, bench_kernels, fig5_linearity,
+                            roofline, table2_breakdown,
+                            table3_execution_time)
 
     suites = {
         "table3": table3_execution_time.run,
@@ -20,6 +22,7 @@ def main() -> None:
         "fig5": fig5_linearity.run,
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
+        "batch": bench_batch.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

@@ -1,0 +1,70 @@
+"""Version-compat shims for the pinned jax (0.4.x).
+
+Parts of the codebase target newer jax spellings (`jax.shard_map`,
+`jax.set_mesh`, `jax.lax.pvary`, `jax.sharding.AxisType`); the pinned
+environment predates them. Import the shims from here — they resolve to
+the native API when it exists and to an equivalent fallback otherwise,
+so the code runs unchanged on both sides.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.6 spelling
+    from jax.experimental.shard_map import shard_map  # type: ignore # noqa: F401
+
+# pvary arrived with the varying-type checker; earlier shard_map treats
+# shard-local zeros as already device-varying, so identity is correct.
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+# the replication/varying checker kwarg was renamed across versions, and
+# old checkers lack rules for while_loop bodies — resolve the spelling once
+_SM_CHECK_KW = next(
+    (kw for kw in ("check_vma", "check_rep")
+     if kw in __import__("inspect").signature(shard_map).parameters),
+    None,
+)
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """shard_map with the static replication checker disabled (needed for
+    bodies containing while_loop on jax versions whose checker has no
+    rule for it; semantics are unchanged)."""
+    kwargs = {_SM_CHECK_KW: False} if _SM_CHECK_KW else {}
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+
+
+def set_mesh(mesh):
+    """`jax.set_mesh(mesh)` context, or a no-op context before it existed
+    (callers pass the mesh explicitly via shard_map/NamedSharding, so the
+    ambient mesh is only a convenience)."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return contextlib.nullcontext()
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the CompilerParams /
+    TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with AxisType.Auto axes where supported (older
+    versions have no axis_types parameter and are Auto-only anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

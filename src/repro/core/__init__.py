@@ -2,15 +2,23 @@
 # sparsification, as a composable JAX module. Public API:
 from repro.core.graph import (
     Graph,
+    GraphBatch,
     official_case,
     powergrid_like_graph,
     random_connected_graph,
 )
 from repro.core.baseline import BaselineResult, baseline_sparsify, default_budget
-from repro.core.sparsify import SparsifyResult, lgrass_sparsify, phase1_device
+from repro.core.sparsify import (
+    SparsifyResult,
+    lgrass_sparsify,
+    lgrass_sparsify_batch,
+    phase1_device,
+    phase1_device_batched,
+)
 
 __all__ = [
     "Graph",
+    "GraphBatch",
     "official_case",
     "powergrid_like_graph",
     "random_connected_graph",
@@ -19,5 +27,7 @@ __all__ = [
     "default_budget",
     "SparsifyResult",
     "lgrass_sparsify",
+    "lgrass_sparsify_batch",
     "phase1_device",
+    "phase1_device_batched",
 ]

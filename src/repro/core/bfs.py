@@ -75,17 +75,31 @@ def bfs(
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
-def degrees(u: jax.Array, v: jax.Array, n: int) -> jax.Array:
+def degrees(
+    u: jax.Array, v: jax.Array, n: int, edge_valid: Optional[jax.Array] = None
+) -> jax.Array:
+    one = (
+        jnp.ones_like(u)
+        if edge_valid is None
+        else edge_valid.astype(jnp.int32)
+    )
     deg = jnp.zeros((n,), dtype=jnp.int32)
-    deg = deg.at[u].add(1)
-    deg = deg.at[v].add(1)
+    deg = deg.at[u].add(one)
+    deg = deg.at[v].add(one)
     return deg
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
-def select_root(u: jax.Array, v: jax.Array, n: int) -> jax.Array:
-    """Max-degree node, ties -> smallest id (matches Graph.root())."""
-    deg = degrees(u, v, n)
+def select_root(
+    u: jax.Array, v: jax.Array, n: int, edge_valid: Optional[jax.Array] = None
+) -> jax.Array:
+    """Max-degree node, ties -> smallest id (matches Graph.root()).
+
+    edge_valid: optional (L,) padding mask — padding edges contribute no
+    degree, so padded nodes (degree 0) can never win against any node of
+    the real, connected graph.
+    """
+    deg = degrees(u, v, n, edge_valid)
     return jnp.argmax(deg).astype(jnp.int32)
 
 

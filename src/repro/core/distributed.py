@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.lca import LiftingTables, lca
 from repro.core.marking import _ball_pair_covered
 
@@ -119,7 +120,7 @@ def _local_lockstep(up, depth, su, sv, sbeta, gstart, gsize, active, k_cap,
         # under shard_map the carries become device-varying on first write;
         # the initial values must carry the same varying type.
         acc_u, acc_v, acc_b, cnt, ovf, out = jax.tree.map(
-            lambda a: jax.lax.pvary(a, vary_axes),
+            lambda a: compat.pvary(a, vary_axes),
             (acc_u, acc_v, acc_b, cnt, ovf, out),
         )
 
@@ -178,7 +179,7 @@ def make_phase1_sharded(mesh: Mesh, shard_axes: Tuple[str, ...], k_cap: int = 32
         )
 
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map_unchecked(
             fn,
             mesh=mesh,
             in_specs=(spec_r, spec_r, spec_e, spec_e, spec_e, spec_e, spec_e,
@@ -213,7 +214,7 @@ def lgrass_phase1_distributed(g, mesh: Mesh, shard_axes=("data",),
     sbeta = jnp.asarray(d["beta"][eid], jnp.int32)
     act = jnp.asarray(plan.slot_edge >= 0)
     fn = make_phase1_sharded(mesh, tuple(shard_axes), k_cap)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out, ovf = fn(
             jnp.asarray(d["up"]),
             jnp.asarray(d["depth_t"]),

@@ -95,9 +95,22 @@ def group_keys(
 
 @jax.jit
 def build_group_layout(
-    crit: jax.Array, hi: jax.Array, lo: jax.Array, crossing: jax.Array
+    crit: jax.Array,
+    hi: jax.Array,
+    lo: jax.Array,
+    crossing: jax.Array,
+    edge_valid: jax.Array | None = None,
 ) -> GroupLayout:
-    """Sort edges by (group, criticality desc, id asc); derive group spans."""
+    """Sort edges by (group, criticality desc, id asc); derive group spans.
+
+    edge_valid: optional (L,) padding mask (batched pipeline). Padding
+    edges are forced out of every crossing group: they land in the
+    inactive (UMAX, UMAX) tail group together with tree / non-crossing
+    edges, where `active` is False, so phase 1 never inspects them and
+    the dense group indices of real crossing groups are unchanged.
+    """
+    if edge_valid is not None:
+        crossing = crossing & edge_valid
     m = crit.shape[0]
     p1 = sort_f32_desc_stable(jnp.where(crossing, crit, -jnp.inf))
     p2 = radix_argsort_u64pair(hi[p1], lo[p1])  # stable => keeps crit order
@@ -222,7 +235,14 @@ def phase1_parallel(
     m = su.shape[0]
     garange = jnp.arange(m, dtype=jnp.int32)
     lane_live = garange < layout.n_groups
-    max_r = jnp.max(jnp.where(lane_live, layout.group_size, 0))
+    # Trip count: longest *active* group only. Inactive slots (tree /
+    # non-crossing / padding) all share the (UMAX, UMAX) tail group whose
+    # lane never fires (`layout.active` is False there), so letting its
+    # size — O(L) — drive the loop would only add no-op rounds.
+    group_active = layout.active[jnp.minimum(layout.group_start, m - 1)]
+    max_r = jnp.max(
+        jnp.where(lane_live & group_active, layout.group_size, 0)
+    )
 
     acc_u = jnp.zeros((m, k_cap), jnp.int32)
     acc_v = jnp.zeros((m, k_cap), jnp.int32)

@@ -25,12 +25,24 @@ INF = jnp.iinfo(jnp.int32).max
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
-def boruvka_mst(u: jax.Array, v: jax.Array, rank: jax.Array, n: int) -> jax.Array:
+def boruvka_mst(
+    u: jax.Array,
+    v: jax.Array,
+    rank: jax.Array,
+    n: int,
+    edge_valid: jax.Array | None = None,
+) -> jax.Array:
     """Returns (L,) bool mask of spanning-tree edges.
 
     rank: (L,) int32, a total order (0 = best edge). The tree minimises
     total rank, i.e. maximises effective weight under our ordering.
+
+    edge_valid: optional (L,) bool padding mask (batched pipeline) —
+    padding edges are never inter-component candidates, so they can never
+    enter the tree, and the termination test ignores them.
     """
+    if edge_valid is None:
+        edge_valid = jnp.ones_like(u, dtype=bool)
 
     def pointer_jump(ptr):
         def cond(p):
@@ -43,12 +55,12 @@ def boruvka_mst(u: jax.Array, v: jax.Array, rank: jax.Array, n: int) -> jax.Arra
 
     def round_cond(state):
         comp, _ = state
-        return jnp.any(comp[u] != comp[v])
+        return jnp.any((comp[u] != comp[v]) & edge_valid)
 
     def round_body(state):
         comp, tree_mask = state
         cu, cv = comp[u], comp[v]
-        inter = cu != cv
+        inter = (cu != cv) & edge_valid
         key = jnp.where(inter, rank, INF)
         best = jnp.full((n,), INF, dtype=jnp.int32)
         best = best.at[cu].min(key)

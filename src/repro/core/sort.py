@@ -40,26 +40,25 @@ def float32_sort_key(x: jax.Array) -> jax.Array:
     return jnp.where(sign == 1, ~bits, bits | jnp.uint32(0x80000000))
 
 
-def _pad_len(m: int) -> int:
-    return (m + _CHUNK - 1) // _CHUNK * _CHUNK
+def _chunk_for(m: int) -> int:
+    """Static chunk size: shrink the (chunk, 256) one-hot tile for small
+    inputs so tiny (batched serving) graphs don't pay the full-width
+    fixed cost; identical output for any chunk."""
+    c = 64
+    while c < _CHUNK and c < m:
+        c <<= 1
+    return c
 
 
-def _digit_histogram(digits: jax.Array, nb: int = _NBUCKETS,
-                     chunk: int = _CHUNK) -> jax.Array:
-    """(Lp,) bucket ids -> (nb,) int32 histogram, chunk-scanned."""
-    chunks = digits.reshape(-1, chunk)
-
-    def step(hist, ck):
-        onehot = ck[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]
-        return hist + jnp.sum(onehot.astype(jnp.int32), axis=0), None
-
-    hist, _ = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
-    return hist
+def _pad_len(m: int, chunk: int = _CHUNK) -> int:
+    return (m + chunk - 1) // chunk * chunk
 
 
-def _digit_positions(digits: jax.Array, offsets: jax.Array,
-                     nb: int = _NBUCKETS, chunk: int = _CHUNK) -> jax.Array:
-    """Stable output position of each element given per-bucket offsets."""
+def _digit_ranks_and_hist(digits: jax.Array, nb: int = _NBUCKETS,
+                          chunk: int = _CHUNK):
+    """Stable within-digit rank of each element + the global digit
+    histogram, from ONE one-hot scan (phases A and B share the tile: the
+    running per-digit carry ends as the full histogram)."""
     chunks = digits.reshape(-1, chunk)
 
     def step(carry, ck):
@@ -68,11 +67,17 @@ def _digit_positions(digits: jax.Array, offsets: jax.Array,
         # exclusive prefix within the chunk, per bucket
         within = jnp.cumsum(onehot_i, axis=0) - onehot_i
         rank = carry[ck] + jnp.sum(within * onehot_i, axis=1)
-        pos = offsets[ck] + rank
-        return carry + jnp.sum(onehot_i, axis=0), pos
+        return carry + jnp.sum(onehot_i, axis=0), rank
 
-    _, pos = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
-    return pos.reshape(-1)
+    hist, ranks = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
+    return ranks.reshape(-1), hist
+
+
+def _digit_positions(digits: jax.Array, offsets: jax.Array,
+                     nb: int = _NBUCKETS, chunk: int = _CHUNK) -> jax.Array:
+    """Stable output position of each element given per-bucket offsets."""
+    ranks, _ = _digit_ranks_and_hist(digits, nb, chunk)
+    return offsets[digits] + ranks
 
 
 def bucket_ranks(keys: jax.Array, n_buckets: int,
@@ -90,7 +95,7 @@ def bucket_ranks(keys: jax.Array, n_buckets: int,
 
 
 def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
-                   m: int) -> jax.Array:
+                   m: int, chunk: int = _CHUNK) -> jax.Array:
     """One stable byte pass: reorder `perm` by byte `shift` of keys[perm]."""
     lp = perm.shape[0]
     cur = keys_u32[perm]
@@ -99,9 +104,9 @@ def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
     # that real keys never use the pad slot (we mask below instead).
     valid = jnp.arange(lp) < m
     digits = jnp.where(valid, digits, _NBUCKETS - 1)
-    hist = _digit_histogram(digits)
+    ranks, hist = _digit_ranks_and_hist(digits, chunk=chunk)
     offsets = jnp.cumsum(hist) - hist  # exclusive
-    pos = _digit_positions(digits, offsets)
+    pos = offsets[digits] + ranks
     out = jnp.zeros((lp,), dtype=perm.dtype).at[pos].set(perm)
     return out
 
@@ -110,12 +115,13 @@ def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
 def radix_argsort_u32(keys: jax.Array) -> jax.Array:
     """Stable ascending argsort of uint32 keys in 4 byte passes, O(L)."""
     m = keys.shape[0]
-    lp = _pad_len(m)
+    chunk = _chunk_for(m)
+    lp = _pad_len(m, chunk)
     keys_p = jnp.zeros((lp,), dtype=jnp.uint32).at[:m].set(keys)
     keys_p = keys_p.at[m:].set(jnp.uint32(0xFFFFFFFF))
     perm = jnp.arange(lp, dtype=jnp.int32)
     for shift in (0, 8, 16, 24):
-        perm = _counting_pass(keys_p, perm, shift, lp)  # pads carry key MAX
+        perm = _counting_pass(keys_p, perm, shift, lp, chunk)  # pads = MAX
     return perm[:m]
 
 
@@ -124,23 +130,33 @@ def radix_argsort_u64pair(hi: jax.Array, lo: jax.Array) -> jax.Array:
     """Stable ascending argsort of (hi, lo) uint32 pairs — the paper's
     8-pass INT64 sort without requiring x64 mode."""
     m = hi.shape[0]
-    lp = _pad_len(m)
+    chunk = _chunk_for(m)
+    lp = _pad_len(m, chunk)
     hi_p = jnp.full((lp,), jnp.uint32(0xFFFFFFFF)).at[:m].set(hi)
     lo_p = jnp.full((lp,), jnp.uint32(0xFFFFFFFF)).at[:m].set(lo)
     perm = jnp.arange(lp, dtype=jnp.int32)
     for shift in (0, 8, 16, 24):
-        perm = _counting_pass(lo_p, perm, shift, lp)
+        perm = _counting_pass(lo_p, perm, shift, lp, chunk)
     for shift in (0, 8, 16, 24):
-        perm = _counting_pass(hi_p, perm, shift, lp)
+        perm = _counting_pass(hi_p, perm, shift, lp, chunk)
     return perm[:m]
 
 
 @jax.jit
-def sort_f32_desc_stable(keys: jax.Array) -> jax.Array:
+def sort_f32_desc_stable(keys: jax.Array,
+                         valid: jax.Array | None = None) -> jax.Array:
     """Permutation sorting float32 keys descending; ties keep input order.
 
     This is the edge-criticality sort: (criticality desc, edge-id asc).
+
+    valid: optional (L,) bool padding mask (batched pipeline). Invalid
+    slots sort after every valid slot — their keys are forced to -inf and
+    stability plus the convention that padding occupies the tail indices
+    puts them strictly last, so valid slots keep the exact ranks they
+    would get in an unpadded sort.
     """
+    if valid is not None:
+        keys = jnp.where(valid, keys, -jnp.inf)
     k = float32_sort_key(keys)
     return radix_argsort_u32(~k)  # bitwise-not of a monotone map => desc
 

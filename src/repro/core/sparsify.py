@@ -64,33 +64,36 @@ class SparsifyResult:
     n_dirty: int
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
-def phase1_device(
+def _phase1_program(
     u: jax.Array,
     v: jax.Array,
     w: jax.Array,
     n: int,
-    k_cap: int = 32,
-    parallel: bool = True,
-    lift_levels: int | None = None,
+    k_cap: int,
+    parallel: bool,
+    lift_levels: int | None,
+    edge_valid: jax.Array | None,
 ):
-    """The full device program: EFF→MST→LCA→RES→SORT→MARK(phase 1).
+    """EFF→MST→LCA→RES→SORT→MARK(phase 1), optionally padding-masked.
 
-    Returns everything the host recovery tail needs. This function is the
-    unit the multi-pod dry-run lowers and compiles.
+    With edge_valid=None this is exactly the single-graph device program.
+    With a padding mask (batched pipeline, see `GraphBatch`) every stage
+    is threaded so padding edges can never enter the tree or a crossing
+    group, and all real-slot outputs are bit-identical to an unpadded run
+    of the same graph (binary-lifting depth only grows with n, and extra
+    levels are provable no-ops for both LCA climbs and root-path sums).
     """
-    root = select_root(u, v, n)
-    depth_g, _ = bfs(u, v, n, root)
+    root = select_root(u, v, n, edge_valid)
+    depth_g, _ = bfs(u, v, n, root, edge_mask=edge_valid)
     eff = effective_weights(u, v, w, depth_g, n)
 
-    perm_eff = sort_f32_desc_stable(eff)
+    perm_eff = sort_f32_desc_stable(eff, valid=edge_valid)
     rank_eff = (
         jnp.zeros_like(perm_eff)
         .at[perm_eff]
         .set(jnp.arange(perm_eff.shape[0], dtype=jnp.int32))
     )
-    tree_mask = boruvka_mst(u, v, rank_eff, n)
+    tree_mask = boruvka_mst(u, v, rank_eff, n, edge_valid)
 
     depth_t, parent_t = bfs(u, v, n, root, edge_mask=tree_mask)
     t = build_lifting(parent_t, depth_t, n, levels=lift_levels)
@@ -102,8 +105,9 @@ def phase1_device(
         jnp.minimum(depth_t[u], depth_t[v]) - depth_t[elca], 1
     ).astype(jnp.int32)
 
-    hi, lo, crossing = group_keys(t, root, u, v, elca, ~tree_mask)
-    layout = build_group_layout(crit, hi, lo, crossing)
+    is_offtree = ~tree_mask if edge_valid is None else (~tree_mask) & edge_valid
+    hi, lo, crossing = group_keys(t, root, u, v, elca, is_offtree)
+    layout = build_group_layout(crit, hi, lo, crossing, edge_valid)
     su, sv, sbeta = u[layout.perm], v[layout.perm], beta[layout.perm]
     fn = phase1_parallel if parallel else phase1_basic
     p1 = fn(t, su, sv, sbeta, layout, k_cap=k_cap)
@@ -121,6 +125,50 @@ def phase1_device(
         group_overflow=p1.group_overflow,
         n_groups=layout.n_groups,
     )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
+def phase1_device(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    n: int,
+    k_cap: int = 32,
+    parallel: bool = True,
+    lift_levels: int | None = None,
+):
+    """The full device program: EFF→MST→LCA→RES→SORT→MARK(phase 1).
+
+    Returns everything the host recovery tail needs. This function is the
+    unit the multi-pod dry-run lowers and compiles.
+    """
+    return _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, None)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
+def phase1_device_batched(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    edge_valid: jax.Array,
+    n: int,
+    k_cap: int = 32,
+    parallel: bool = True,
+    lift_levels: int | None = None,
+):
+    """`phase1_device` vmapped over a leading batch axis.
+
+    Args are (B, L_max) padded edge lists plus the (B, L_max) padding
+    mask; `n` is the shared node pad n_max. One compile + one dispatch
+    covers the whole batch — the amortisation the serving path needs.
+    """
+    return jax.vmap(
+        lambda bu, bv, bw, bev: _phase1_program(
+            bu, bv, bw, n, k_cap, parallel, lift_levels, bev
+        )
+    )(u, v, w, edge_valid)
 
 
 def lgrass_sparsify(
@@ -163,27 +211,47 @@ def lgrass_sparsify(
         if tree_dmax >= (1 << lift_levels):  # bound violated: redo safely
             d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
                                              None))
+    return _recovery_tail(g, d, budget)
 
-    tree_mask = d["tree_mask"].astype(bool)
-    crossing = d["crossing"].astype(bool)
+
+def _recovery_tail(g: Graph, d: dict, budget: int) -> SparsifyResult:
+    """Host recovery from one graph's phase-1 outputs.
+
+    `d` holds numpy arrays of padded length L_pad >= g.m (node tables of
+    n_pad >= g.n); the single-graph path passes L_pad == L. Padding slots
+    are sliced away after the per-edge scatters: padding edges were kept
+    out of the tree and every crossing group on device, so real slots
+    carry exactly the unpadded values.
+    """
+    n, L = g.n, g.m
+    L_pad = int(d["tree_mask"].shape[0])
+    tree_mask_p = d["tree_mask"].astype(bool)
+    crossing_p = d["crossing"].astype(bool)
     perm = d["perm"].astype(np.int64)
     gidx = d["gidx"].astype(np.int64)
 
     # per-edge phase-1 decision / dense group / overflow dirtiness
-    accept_by_edge = np.zeros(L, bool)
+    accept_by_edge = np.zeros(L_pad, bool)
     accept_by_edge[perm] = d["accept_sorted"]
-    group_of_edge = np.full(L, -1, np.int64)
+    group_of_edge = np.full(L_pad, -1, np.int64)
     group_of_edge[perm] = gidx
-    group_of_edge[~crossing] = -1
+    group_of_edge[~crossing_p] = -1
     ovf_groups = d["group_overflow"].astype(bool)
-    dirty0 = np.zeros(L, bool)
-    cross_perm_mask = crossing[perm]
+    dirty0 = np.zeros(L_pad, bool)
+    cross_perm_mask = crossing_p[perm]
     dirty_sorted = ovf_groups[gidx] & cross_perm_mask
     dirty0[perm] = dirty_sorted
 
+    tree_mask = tree_mask_p[:L]
+    crossing = crossing_p[:L]
+    accept_by_edge = accept_by_edge[:L]
+    group_of_edge = group_of_edge[:L]
+    dirty0 = dirty0[:L]
+
     # global criticality order over all off-tree edges (incl. non-crossing)
     offtree = ~tree_mask
-    keys = np.where(offtree, d["crit"], np.float32(-np.inf)).astype(np.float32)
+    keys = np.where(offtree, d["crit"][:L],
+                    np.float32(-np.inf)).astype(np.float32)
     crit_order = H.desc_stable_order_np(keys)[: int(offtree.sum())]
 
     accepted = recover(
@@ -191,10 +259,10 @@ def lgrass_sparsify(
         u=g.u.astype(np.int64),
         v=g.v.astype(np.int64),
         tree_mask=tree_mask,
-        parent_t=d["parent_t"],
-        depth_t=d["depth_t"],
-        up=d["up"],
-        beta=d["beta"],
+        parent_t=d["parent_t"][:n],
+        depth_t=d["depth_t"][:n],
+        up=d["up"][:, :n],
+        beta=d["beta"][:L],
         crossing=crossing,
         crit_order=crit_order,
         phase1_accept=accept_by_edge,
@@ -211,3 +279,49 @@ def lgrass_sparsify(
         n_overflow_groups=int(ovf_groups.sum()),
         n_dirty=int(dirty0.sum()),
     )
+
+
+def lgrass_sparsify_batch(
+    graphs,
+    budget: Optional[int] = None,
+    k_cap: int = 32,
+    parallel: bool = True,
+) -> list:
+    """Run LGRASS on many graphs with ONE device compile + dispatch.
+
+    graphs: a `GraphBatch`, or a sequence of `Graph`s (padded here).
+    budget: None -> per-graph `default_budget(g.n)`; a scalar applies to
+    every graph; a sequence gives one budget per graph (None entries
+    fall back to that graph's default).
+
+    Phase 1 runs as `phase1_device_batched` over the padded (B, L_max)
+    edge lists; the recovery tail then replays each graph on host exactly
+    as the single-graph path does. Results are bit-identical to calling
+    `lgrass_sparsify(g)` per graph (asserted in tests/test_batch.py).
+    """
+    from repro.core.graph import GraphBatch
+
+    batch = (graphs if isinstance(graphs, GraphBatch)
+             else GraphBatch.from_graphs(list(graphs)))
+    if budget is None or np.ndim(budget) == 0:
+        budget = [budget] * len(batch.graphs)
+    elif len(budget) != len(batch.graphs):
+        raise ValueError("one budget per graph required")
+    budgets = [default_budget(g.n) if b is None else int(b)
+               for g, b in zip(batch.graphs, budget)]
+
+    d = jax.device_get(phase1_device_batched(
+        jnp.asarray(batch.u, jnp.int32),
+        jnp.asarray(batch.v, jnp.int32),
+        jnp.asarray(batch.w, jnp.float32),
+        jnp.asarray(batch.edge_valid, bool),
+        batch.n_max,
+        k_cap,
+        parallel,
+        None,
+    ))
+    results = []
+    for i, (g, b) in enumerate(zip(batch.graphs, budgets)):
+        di = {k: np.asarray(val[i]) for k, val in d.items()}
+        results.append(_recovery_tail(g, di, b))
+    return results

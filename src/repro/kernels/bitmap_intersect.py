@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _bitmap_kernel(m1_ref, m2_ref, out_ref):
     inter = jnp.bitwise_and(m1_ref[...], m2_ref[...])   # (block, W)
@@ -38,7 +40,7 @@ def bitmap_intersect_any(m1: jax.Array, m2: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((l,), jnp.bool_),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(m1, m2)

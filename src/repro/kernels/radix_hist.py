@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NB = 256
 
 
@@ -69,7 +71,7 @@ def bucket_rank_hist(digits: jax.Array, *, chunk: int = 1024,
             jax.ShapeDtypeStruct((NB,), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((NB,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(digits)

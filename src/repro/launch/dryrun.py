@@ -232,6 +232,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     hlo = analyze(compiled.as_text())
 
     chips = 512 if multi_pod else 256

@@ -70,7 +70,9 @@ def use_mesh(mesh: Optional[Mesh]):
     _state.mesh = mesh
     try:
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            from repro import compat
+
+            with compat.set_mesh(mesh):
                 yield
         else:
             yield

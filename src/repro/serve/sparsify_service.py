@@ -1,0 +1,150 @@
+"""Batched sparsification serving: size-bucketed `GraphBatch` dispatch.
+
+The production north star is many graphs per device dispatch, not one.
+`lgrass_sparsify_batch` already amortises compile + dispatch across a
+padded batch; this module adds the traffic-facing policy:
+
+  * **bucketing** — a request stream contains arbitrary (n, L) sizes,
+    and every distinct padded shape is a fresh XLA compile. We round the
+    pad targets up to powers of two (with a small floor), so the number
+    of compiled programs is logarithmic in the size range instead of
+    linear in the number of distinct sizes seen.
+  * **chunking** — buckets are dispatched in batches of at most
+    `max_batch_size` graphs to bound device memory.
+  * **batch-dim bucketing** — the leading batch axis is itself a
+    compiled dimension, so each chunk is padded up to a power of two
+    with trivial placeholder graphs (dropped from the results); chunk
+    sizes 5, 7, 12 share the B=8/8/16 programs instead of compiling
+    three times.
+
+Results come back in request order and are bit-identical to per-graph
+`lgrass_sparsify` (the batch path guarantees this; see
+tests/test_batch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph, GraphBatch
+from repro.core.sparsify import SparsifyResult, lgrass_sparsify_batch
+
+
+def _placeholder_graph() -> Graph:
+    """Smallest valid graph; pads the batch axis (results discarded)."""
+    return Graph(n=2, u=np.array([0], np.int32), v=np.array([1], np.int32),
+                 w=np.array([1.0], np.float32))
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    p = 1
+    while p < x:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    n_graphs: int = 0
+    n_dispatches: int = 0
+    n_padded_edge_slots: int = 0   # total L_max over dispatched rows
+    n_real_edge_slots: int = 0
+    bucket_counts: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict
+    )
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of dispatched edge slots that were padding."""
+        if self.n_padded_edge_slots == 0:
+            return 0.0
+        return 1.0 - self.n_real_edge_slots / self.n_padded_edge_slots
+
+
+class SparsifyService:
+    """Sparsify request batches with a bounded set of compiled shapes.
+
+    >>> svc = SparsifyService()
+    >>> results = svc.sparsify(list_of_graphs)   # request order preserved
+    """
+
+    def __init__(
+        self,
+        k_cap: int = 32,
+        parallel: bool = True,
+        max_batch_size: int = 64,
+        min_n_bucket: int = 16,
+        min_L_bucket: int = 32,
+    ):
+        self.k_cap = k_cap
+        self.parallel = parallel
+        self.max_batch_size = max_batch_size
+        self.min_n_bucket = min_n_bucket
+        self.min_L_bucket = min_L_bucket
+        self.stats = ServiceStats()
+
+    def bucket_key(self, g: Graph) -> Tuple[int, int]:
+        """(n_bucket, L_bucket): pad targets rounded up to powers of two."""
+        return (
+            max(next_pow2(g.n), self.min_n_bucket),
+            max(next_pow2(g.m), self.min_L_bucket),
+        )
+
+    def sparsify(
+        self,
+        graphs: Sequence[Graph],
+        budget: Optional[object] = None,
+    ) -> List[SparsifyResult]:
+        """Sparsify `graphs`, returning results in request order.
+
+        budget: None (per-graph default), an int for all graphs, or a
+        sequence with one budget per graph.
+        """
+        graphs = list(graphs)
+        # same scalar/sequence normalization as lgrass_sparsify_batch
+        if budget is None or np.ndim(budget) == 0:
+            budgets = [budget] * len(graphs)
+        else:
+            budgets = list(budget)
+            if len(budgets) != len(graphs):
+                raise ValueError("one budget per graph required")
+
+        by_bucket: Dict[Tuple[int, int], List[int]] = {}
+        for i, g in enumerate(graphs):
+            by_bucket.setdefault(self.bucket_key(g), []).append(i)
+
+        results: List[Optional[SparsifyResult]] = [None] * len(graphs)
+        for key in sorted(by_bucket):
+            idxs = by_bucket[key]
+            n_bucket, L_bucket = key
+            self.stats.bucket_counts[key] = (
+                self.stats.bucket_counts.get(key, 0) + len(idxs)
+            )
+            for lo in range(0, len(idxs), self.max_batch_size):
+                chunk = idxs[lo: lo + self.max_batch_size]
+                # pad the batch axis to a pow2 so chunk sizes share programs
+                B_pad = next_pow2(len(chunk))
+                n_fill = B_pad - len(chunk)
+                batch = GraphBatch.from_graphs(
+                    [graphs[i] for i in chunk]
+                    + [_placeholder_graph()] * n_fill,
+                    n_max=n_bucket,
+                    L_max=L_bucket,
+                )
+                out = lgrass_sparsify_batch(
+                    batch,
+                    budget=[budgets[i] for i in chunk] + [None] * n_fill,
+                    k_cap=self.k_cap, parallel=self.parallel,
+                )
+                for i, r in zip(chunk, out):  # placeholder tail dropped
+                    results[i] = r
+                self.stats.n_dispatches += 1
+                self.stats.n_graphs += len(chunk)
+                self.stats.n_padded_edge_slots += L_bucket * B_pad
+                self.stats.n_real_edge_slots += sum(
+                    graphs[i].m for i in chunk
+                )
+        return results  # type: ignore[return-value]

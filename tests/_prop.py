@@ -1,0 +1,50 @@
+"""Dependency-free property sweeps (stdlib + numpy stand-in for hypothesis).
+
+The seed suite used `hypothesis.given`; that package is not part of the
+pinned environment, so properties are exercised as seeded pseudo-random
+parameter sweeps instead: each draw spec is a callable `rng -> value`,
+and `cases(...)` materialises ~20 deterministic tuples for
+`pytest.mark.parametrize`. Same coverage intent (including the `ties`
+weight mode and heavy duplicate keys), fully reproducible, no shrinking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def integers(lo: int, hi: int):
+    """Draw an int uniformly from [lo, hi] (inclusive, like hypothesis)."""
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def sampled_from(choices):
+    seq = list(choices)
+    return lambda rng: seq[int(rng.integers(len(seq)))]
+
+
+def float32_lists(min_value: float, max_value: float,
+                  min_size: int, max_size: int):
+    """Non-negative float32 lists; half the draws come from a small value
+    pool so equal-key (stability) paths are hit hard."""
+
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        if rng.random() < 0.5:
+            pool = rng.uniform(min_value, max_value, size=4)
+            xs = rng.choice(pool, size=size)
+        else:
+            xs = rng.uniform(min_value, max_value, size=size)
+        return np.asarray(xs, np.float32).tolist()
+
+    return draw
+
+
+def cases(*draws, n_cases: int = 20, seed: int = 0):
+    """Materialise `n_cases` tuples (or scalars, for a single draw) for
+    pytest.mark.parametrize. Deterministic in (draw specs, seed)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_cases):
+        vals = tuple(d(rng) for d in draws)
+        out.append(vals if len(vals) > 1 else vals[0])
+    return out

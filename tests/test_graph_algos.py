@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _prop import cases, integers, sampled_from
 from repro.core import _host as H
 from repro.core.bfs import bfs, effective_weights, select_root
 from repro.core.graph import random_connected_graph
@@ -35,8 +35,11 @@ def test_bfs_matches_oracle(seed):
     assert np.array_equal(np.asarray(p), pn)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000), st.sampled_from(["lognormal", "ties"]))
+@pytest.mark.parametrize(
+    "seed,weight",
+    cases(integers(0, 10_000), sampled_from(["lognormal", "ties"]),
+          n_cases=20, seed=2024),
+)
 def test_boruvka_equals_kruskal(seed, weight):
     g, u, v, w = _setup(n=40, m=90, seed=seed, weight=weight)
     root = int(select_root(u, v, g.n))

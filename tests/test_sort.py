@@ -3,8 +3,8 @@ stability, and equivalence with numpy sorts."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _prop import cases, float32_lists
 from repro.core.sort import (
     bucket_ranks,
     float32_sort_key,
@@ -54,9 +54,11 @@ def test_desc_stable():
     assert perm.tolist() == [1, 2, 4, 5, 0, 3]
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.floats(min_value=0, max_value=1e6, width=32),
-                min_size=1, max_size=300))
+@pytest.mark.parametrize(
+    "xs",
+    cases(float32_lists(0, 1e6, min_size=1, max_size=300),
+          n_cases=25, seed=11),
+)
 def test_desc_stable_property(xs):
     keys = np.array(xs, np.float32)
     perm = np.asarray(sort_f32_desc_stable(jnp.asarray(keys)))

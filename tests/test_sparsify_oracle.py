@@ -4,8 +4,8 @@ the competition's own correctness criterion ("outputs the same result as
 provided program")."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _prop import cases, integers, sampled_from
 from repro.core import (baseline_sparsify, lgrass_sparsify,
                         powergrid_like_graph, random_connected_graph)
 
@@ -38,10 +38,13 @@ def test_lgrass_powergrid_case():
     assert np.array_equal(b.edge_mask, r.edge_mask)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 100_000), st.integers(2, 30))
-def test_lgrass_equals_baseline_property(seed, budget):
-    g = random_connected_graph(36, 80, seed=seed)
+@pytest.mark.parametrize(
+    "seed,budget,weight",
+    cases(integers(0, 100_000), integers(2, 30),
+          sampled_from(["lognormal", "ties"]), n_cases=20, seed=77),
+)
+def test_lgrass_equals_baseline_property(seed, budget, weight):
+    g = random_connected_graph(36, 80, seed=seed, weight=weight)
     b = baseline_sparsify(g, budget=budget)
     r = lgrass_sparsify(g, budget=budget)
     assert np.array_equal(b.edge_mask, r.edge_mask)

@@ -12,8 +12,9 @@ parallelism only pays on wide hardware). Two numbers:
     the service buckets every graph into one padded shape and compiles
     once. This is the number that matters for serving traffic.
 
-    PYTHONPATH=src python benchmarks/bench_batch.py
+    PYTHONPATH=src python benchmarks/bench_batch.py [--smoke]
 """
+import argparse
 import time
 
 import numpy as np
@@ -97,7 +98,11 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    rows = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps (CI smoke job)")
+    args = ap.parse_args()
+    rows = run(quick=args.smoke)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     steady = rows[2][2]

@@ -9,11 +9,11 @@ def main() -> None:
                     help="small sizes (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table2,fig5,kernels,roofline,"
-                         "batch")
+                         "batch,recovery")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_kernels, fig5_linearity,
-                            roofline, table2_breakdown,
+    from benchmarks import (bench_batch, bench_kernels, bench_recovery,
+                            fig5_linearity, roofline, table2_breakdown,
                             table3_execution_time)
 
     suites = {
@@ -23,6 +23,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
         "batch": bench_batch.run,
+        "recovery": bench_recovery.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

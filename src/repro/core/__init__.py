@@ -3,13 +3,22 @@
 from repro.core.graph import (
     Graph,
     GraphBatch,
+    feeder_like_graph,
     official_case,
     powergrid_like_graph,
     random_connected_graph,
 )
 from repro.core.baseline import BaselineResult, baseline_sparsify, default_budget
+from repro.core.pow2 import log2_ceil, next_pow2
+from repro.core.recovery import (
+    recover_device,
+    recover_device_batched,
+    recover_host,
+)
 from repro.core.sparsify import (
     SparsifyResult,
+    lgrass_device,
+    lgrass_device_batched,
     lgrass_sparsify,
     lgrass_sparsify_batch,
     phase1_device,
@@ -19,6 +28,7 @@ from repro.core.sparsify import (
 __all__ = [
     "Graph",
     "GraphBatch",
+    "feeder_like_graph",
     "official_case",
     "powergrid_like_graph",
     "random_connected_graph",
@@ -26,8 +36,15 @@ __all__ = [
     "baseline_sparsify",
     "default_budget",
     "SparsifyResult",
+    "lgrass_device",
+    "lgrass_device_batched",
     "lgrass_sparsify",
     "lgrass_sparsify_batch",
+    "log2_ceil",
+    "next_pow2",
     "phase1_device",
     "phase1_device_batched",
+    "recover_device",
+    "recover_device_batched",
+    "recover_host",
 ]

@@ -12,6 +12,8 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.core.pow2 import log2_ceil as _log2_ceil
+
 INF_I32 = np.iinfo(np.int32).max
 
 
@@ -71,13 +73,6 @@ def rank_from_order(order: np.ndarray) -> np.ndarray:
     rank = np.empty(len(order), np.int32)
     rank[order] = np.arange(len(order), dtype=np.int32)
     return rank
-
-
-def _log2_ceil(n: int) -> int:
-    k = 1
-    while (1 << k) < n:
-        k += 1
-    return max(k, 1)
 
 
 def build_lifting_np(parent, depth, n):

@@ -214,6 +214,50 @@ def random_connected_graph(
     return g
 
 
+def feeder_like_graph(
+    n: int,
+    chords: int,
+    span: int = 24,
+    seed: int = 0,
+) -> Graph:
+    """Radial-feeder topology: a chain with `chords` local shortcuts.
+
+    Distribution networks are chain-heavy; on a chain, a chord (i, j)
+    has its shallower endpoint as the LCA, so almost every off-tree edge
+    is NON-crossing — phase 1 has nothing to decide and the Algorithm-6
+    recovery replay does all the work. This is the recovery-dominated
+    regime (the workload bench_recovery.py stresses); the parity tests
+    use it to hammer the non-crossing / after-effects paths.
+    """
+    rng = np.random.default_rng(seed)
+    span = min(max(span, 2), n - 1)
+    tu = np.arange(n - 1, dtype=np.int64)
+    tv = np.arange(1, n, dtype=np.int64)
+    seen = set(zip(tu.tolist(), tv.tolist()))
+    cu, cv = [], []
+    # the generator only reaches pairs with 2 <= j - i <= span; clamping
+    # to the all-pairs bound would let the rejection loop spin forever
+    max_chords = sum(n - d for d in range(2, span + 1))
+    chords = min(chords, max_chords)
+    while len(cu) < chords:
+        i = int(rng.integers(0, n - 2))
+        j = min(i + int(rng.integers(2, span + 1)), n - 1)
+        key = (min(i, j), max(i, j))
+        if i == j or key in seen:
+            continue
+        seen.add(key)
+        cu.append(i)
+        cv.append(j)
+    u = np.concatenate([tu, np.array(cu, dtype=np.int64)])
+    v = np.concatenate([tv, np.array(cv, dtype=np.int64)])
+    w = rng.lognormal(0.0, 1.0, size=len(u))
+    perm = rng.permutation(len(u))
+    g = Graph(n=n, u=u[perm].astype(np.int32), v=v[perm].astype(np.int32),
+              w=w[perm].astype(np.float32))
+    g.validate()
+    return g
+
+
 def powergrid_like_graph(n_side: int, chord_frac: float = 0.25,
                          seed: int = 0) -> Graph:
     """2-D grid (power-grid-ish topology, as in the IPCC cases) + chords."""

@@ -174,6 +174,35 @@ class Phase1Result(NamedTuple):
     group_overflow: jax.Array  # (L,) bool — per dense group index
 
 
+@jax.jit
+def phase1_edge_views(
+    perm: jax.Array,
+    gidx: jax.Array,
+    accept_sorted: jax.Array,
+    group_overflow: jax.Array,
+    crossing: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter phase-1's sorted-slot outputs back to edge-id order.
+
+    The recovery stage consumes per-edge views: the phase-1 accept
+    decision, the dense group index (-1 for anything that is not a
+    crossing edge — tree, non-crossing, padding), and the initial dirty
+    set (every crossing edge of an overflowed group). This is the glue
+    between MARK and REC; the host tail computes the same three arrays
+    in numpy (`_recovery_tail`), asserted equal by the parity tests.
+    """
+    L = perm.shape[0]
+    accept_by_edge = jnp.zeros((L,), bool).at[perm].set(accept_sorted)
+    group_of_edge = jnp.full((L,), -1, jnp.int32).at[perm].set(
+        gidx.astype(jnp.int32)
+    )
+    group_of_edge = jnp.where(crossing, group_of_edge, -1)
+    dirty0 = jnp.zeros((L,), bool).at[perm].set(
+        group_overflow[gidx] & crossing[perm]
+    )
+    return accept_by_edge, group_of_edge, dirty0
+
+
 @functools.partial(jax.jit, static_argnames=("k_cap",))
 def phase1_basic(
     t: LiftingTables,

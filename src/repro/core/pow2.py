@@ -1,0 +1,28 @@
+"""Shared power-of-two helpers (host-side shape/bucket arithmetic).
+
+Every layer that pads or buckets shapes needs the same two integers:
+`next_pow2` for pad targets (serving buckets, batch axes, buffer caps)
+and `log2_ceil` for table depths (binary-lifting levels). They used to
+be re-implemented per module; this is the single home (tests/test_pow2.py).
+"""
+from __future__ import annotations
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    p = 1
+    while p < x:
+        p <<= 1
+    return p
+
+
+def log2_ceil(n: int) -> int:
+    """Smallest k >= 1 with 2**k >= n.
+
+    The floor of 1 matters: binary-lifting tables always carry at least
+    one level so the climb loops are well-formed for trivial trees.
+    """
+    k = 1
+    while (1 << k) < n:
+        k += 1
+    return k

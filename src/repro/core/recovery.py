@@ -2,11 +2,9 @@
 
 Phase 1 (marking.py) resolves crossing edges per independent LCA group.
 Non-crossing edges, overflowed groups and the global budget cut are
-replayed here sequentially in global criticality order — exactly as the
-paper keeps Algorithm 6 a sequential tail even in parallel LGRASS
-(Fig. 1c). The replay reuses phase-1 decisions wherever they are provably
-final and re-derives them only where a *dirty* flag says an interaction
-outside phase 1's model occurred:
+replayed here in global criticality order. The replay reuses phase-1
+decisions wherever they are provably final and re-derives them only where
+a *dirty* flag says an interaction outside phase 1's model occurred:
 
   * an accepted non-crossing edge dirties every off-tree edge it covers
     ("enforced"/"withdrawn" propagation, Alg. 6 lines 11-19);
@@ -18,17 +16,41 @@ outside phase 1's model occurred:
 Dirty or non-crossing edges are decided by the exact ball-pair test
 against the accepted-so-far set, so the result equals the baseline greedy
 (tests assert bit-equality against baseline.py on random graphs).
+
+Two implementations of the identical semantics live here:
+
+  * `recover_host` — the numpy oracle, mirroring the paper's own
+    sequential Algorithm 6 tail (Fig. 1c). Kept as the ground truth the
+    device program is asserted against.
+  * `recover_device` — a jit/vmap-able chunked `lax.scan` over the
+    criticality-ordered edge stream. The accepted set lives in a
+    budget-bounded (b_cap,) buffer; the ball-pair coverage test is
+    vectorised via binary-lifting tree distances (lca.py tables;
+    `x in B(c, beta)` iff `tree_dist(x, c) <= beta`, so no ball is ever
+    materialised), with one batched LCA per block of `chunk` edges
+    answering every block-vs-buffer and block-vs-block query at once;
+    and the after-effects dirty propagation is *lazy*: instead of the
+    host's eager "dirty every edge this ball pair covers" BFS scatter,
+    each edge derives its own dirty bit at processing time from (a) the
+    overflow seed, (b) a per-group flip flag maintained with O(1)
+    scatters, and (c) coverage by any accepted *non-crossing* buffer
+    entry — coverage is time-invariant once the tree is fixed, so
+    deferring the test is exact. Decisions are integer comparisons
+    throughout, hence bit-identical to the host replay.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import _host as H
+from repro.core.lca import LiftingTables, tree_distance
 
 
-def recover(
+def recover_host(
     n: int,
     u: np.ndarray,
     v: np.ndarray,
@@ -56,23 +78,17 @@ def recover(
     dirty = dirty0.copy()
     out = np.zeros(L, bool)
 
-    acc_u: list = []
-    acc_v: list = []
-    acc_b: list = []
-    au = np.empty(0, np.int64)
-    av = np.empty(0, np.int64)
-    ab = np.empty(0, np.int64)
-    stale = True
+    # accepted set: preallocated at the budget bound (the greedy stops at
+    # `budget` accepts, so no growth/rebuild ever happens mid-replay)
+    cap = max(int(budget), 1)
+    acc_u = np.zeros(cap, np.int64)
+    acc_v = np.zeros(cap, np.int64)
+    acc_b = np.zeros(cap, np.int64)
 
-    def covered_by_any(e: int) -> bool:
-        nonlocal au, av, ab, stale
-        if not acc_u:
+    def covered_by_any(e: int, count: int) -> bool:
+        if count == 0:
             return False
-        if stale:
-            au = np.array(acc_u, np.int64)
-            av = np.array(acc_v, np.int64)
-            ab = np.array(acc_b, np.int64)
-            stale = False
+        au, av, ab = acc_u[:count], acc_v[:count], acc_b[:count]
         x, y = int(u[e]), int(v[e])
         dxu = H.tree_dist_np(up, depth_t, x, au)
         dxv = H.tree_dist_np(up, depth_t, x, av)
@@ -89,17 +105,16 @@ def recover(
         if crossing[e] and not dirty[e]:
             dec = bool(phase1_accept[e])
         else:
-            dec = not covered_by_any(e)
+            dec = not covered_by_any(e, count)
         if crossing[e] and dec != bool(phase1_accept[e]):
             # flip: later same-group phase-1 decisions are stale
             dirty |= group_of_edge == group_of_edge[e]
         if dec:
             out[e] = True
+            acc_u[count] = int(u[e])
+            acc_v[count] = int(v[e])
+            acc_b[count] = int(beta[e])
             count += 1
-            acc_u.append(int(u[e]))
-            acc_v.append(int(v[e]))
-            acc_b.append(int(beta[e]))
-            stale = True
             if not crossing[e]:
                 # Alg. 6 after-effects: dirty everything this edge covers
                 s1 = H.ball_np(adj, int(u[e]), int(beta[e]))
@@ -111,3 +126,253 @@ def recover(
                 cov = offtree & ((m1[u] & m2[v]) | (m2[u] & m1[v]))
                 dirty |= cov
     return out
+
+
+# Backwards-compatible name (distributed tests drive the oracle directly).
+recover = recover_host
+
+
+def _pair_table(t: LiftingTables, xs, ys, cols_u, cols_v, cols_b,
+                use_tree_kernel):
+    """Ball-pair cover table for a block of edges vs a set of candidates.
+
+    xs, ys: (C,) block edge endpoints. cols_*: (K,) candidate accepted
+    edges (u, v, beta). Returns (C, K) bool — candidate j's ball pair
+    covers block edge i. The 4·C·K tree distances are one fused batched
+    LCA (or one Pallas tree-distance kernel call) — this is where the
+    chunking pays: the O(log n) climb's sequential latency is amortised
+    over the whole block instead of one edge.
+    """
+    c, k = xs.shape[0], cols_u.shape[0]
+    qa = jnp.broadcast_to(jnp.stack([xs, ys, xs, ys])[:, :, None],
+                          (4, c, k))
+    qb = jnp.broadcast_to(
+        jnp.stack([cols_u, cols_v, cols_v, cols_u])[:, None, :], (4, c, k)
+    )
+    if use_tree_kernel:
+        from repro.kernels.ops import tree_dist_pairs
+
+        d = tree_dist_pairs(t.up, t.depth, qa.ravel(), qb.ravel())
+        d = d.reshape(4, c, k)
+    else:
+        d = tree_distance(t, qa, qb)
+    b = cols_b[None, :]
+    return ((d[0] <= b) & (d[1] <= b)) | ((d[2] <= b) & (d[3] <= b))
+
+
+def _recover_scan(
+    t: LiftingTables,
+    u: jax.Array,
+    v: jax.Array,
+    beta: jax.Array,
+    offtree: jax.Array,
+    crossing: jax.Array,
+    order: jax.Array,
+    phase1_accept: jax.Array,
+    group_of_edge: jax.Array,
+    dirty0: jax.Array,
+    budget: jax.Array,
+    b_cap: int,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
+):
+    """The device replay: a chunked two-level lax.scan over rank slots.
+
+    `order` is a full (L,) permutation — (crit desc, id asc) with tree /
+    padding slots forced to -inf keys, so they trail every off-tree edge
+    and are skipped via the gathered `offtree` flag. `budget` is a traced
+    scalar; `b_cap` (static) bounds the accept buffer and must satisfy
+    b_cap >= budget (the greedy never holds more than `budget` accepts).
+    Because `budget` is traced, that precondition cannot raise here; it
+    is enforced by clamping budget to b_cap — the result is then exact
+    for the clamped budget instead of silently corrupting the buffer
+    (the `lgrass_sparsify(_batch)` wrappers validate and raise on the
+    host side before ever reaching this).
+
+    Scheduling: slots are processed in blocks of `chunk`. Per block, ONE
+    batched LCA evaluates the cover table of all block edges against
+    (a) the buffer snapshot and (b) every other block edge — exploiting
+    the pdGRASS observation that the sweep's interactions are local. The
+    inner scan then replays the block's decisions with pure table
+    lookups: a buffer slot filled before the block reads column `slot`,
+    a slot filled mid-block by block edge j reads column b_cap + j
+    (`buf_idx` tracks which). Group-flip dirt is a per-*group* flag
+    updated with O(1) scatters (index L is the never-set parking slot
+    for non-crossing edges). Distances are integers, so chunking changes
+    nothing observable: decisions are bit-identical to the host replay.
+
+    The outer loop is a while_loop gated on `cnt < budget`: once the
+    budget is exhausted nothing later in the stream can change any
+    output (the host replay breaks out at the same point), so the
+    common case — budgets of a few percent of n, filled within the top
+    criticality ranks — touches only the leading blocks. Under vmap the
+    loop runs the union of the lanes' needed blocks, with finished
+    lanes' carries frozen by the batching rule.
+
+    Returns (accepted (L,) bool, n_accepted int32).
+    """
+    L = u.shape[0]
+    budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(b_cap))
+    c = max(min(chunk, L), 1)
+    n_blocks = -(-L // c)
+    pad = n_blocks * c - L
+    order_pad = jnp.concatenate(
+        [order.astype(jnp.int32),
+         jnp.zeros((pad,), jnp.int32)]).reshape(n_blocks, c)
+    svalid_pad = jnp.concatenate(
+        [jnp.ones((L,), bool), jnp.zeros((pad,), bool)]).reshape(n_blocks, c)
+    occ_iota = jnp.arange(b_cap, dtype=jnp.int32)
+
+    def inner(carry, xs):
+        buf_u, buf_v, buf_b, buf_nc, buf_idx, cnt, gflag, out = carry
+        e, a0, pair_row, i = xs
+        active = a0 & (cnt < budget)
+
+        pair_k = pair_row[buf_idx]       # (b_cap,) per-slot cover bits
+        occ = occ_iota < cnt
+        cov_any = jnp.any(pair_k & occ)
+        cov_nc = jnp.any(pair_k & occ & buf_nc)
+
+        cr = crossing[e]
+        g = group_of_edge[e]
+        gsafe = jnp.where(g < 0, L, g).astype(jnp.int32)
+        dirty_e = dirty0[e] | gflag[gsafe] | cov_nc
+        dec = active & jnp.where(cr & ~dirty_e, phase1_accept[e], ~cov_any)
+
+        # flip w.r.t. phase 1: dirty the rest of the group (O(1) scatter)
+        flip = active & cr & (dec != phase1_accept[e])
+        gflag = gflag.at[gsafe].max(flip)
+
+        out = out.at[e].max(dec)  # max: padding re-visits edge id 0
+        slot = jnp.minimum(cnt, b_cap - 1)
+        x = jnp.where(active, u[e], 0).astype(jnp.int32)
+        y = jnp.where(active, v[e], 0).astype(jnp.int32)
+        buf_u = buf_u.at[slot].set(jnp.where(dec, x, buf_u[slot]))
+        buf_v = buf_v.at[slot].set(jnp.where(dec, y, buf_v[slot]))
+        buf_b = buf_b.at[slot].set(
+            jnp.where(dec, beta[e].astype(jnp.int32), buf_b[slot])
+        )
+        buf_nc = buf_nc.at[slot].set(jnp.where(dec, ~cr, buf_nc[slot]))
+        blk_col = jnp.int32(b_cap) + i
+        buf_idx = buf_idx.at[slot].set(
+            jnp.where(dec, blk_col, buf_idx[slot])
+        )
+        cnt = cnt + dec.astype(jnp.int32)
+        return (buf_u, buf_v, buf_b, buf_nc, buf_idx, cnt, gflag, out), None
+
+    def cond(state):
+        blk, _, _, _, _, cnt, _, _ = state
+        return (blk < n_blocks) & (cnt < budget)
+
+    def outer(state):
+        blk, buf_u, buf_v, buf_b, buf_nc, cnt, gflag, out = state
+        eids = jax.lax.dynamic_index_in_dim(order_pad, blk, keepdims=False)
+        svalid = jax.lax.dynamic_index_in_dim(svalid_pad, blk,
+                                              keepdims=False)
+        a0 = svalid & offtree[eids]
+        bx = jnp.where(a0, u[eids], 0).astype(jnp.int32)
+        by = jnp.where(a0, v[eids], 0).astype(jnp.int32)
+        # one fused cover table: snapshot buffer ++ block endpoints
+        cols_u = jnp.concatenate([buf_u, bx])
+        cols_v = jnp.concatenate([buf_v, by])
+        cols_b = jnp.concatenate([buf_b, beta[eids].astype(jnp.int32)])
+        pair_tbl = _pair_table(t, bx, by, cols_u, cols_v, cols_b,
+                               use_tree_kernel)
+        (buf_u, buf_v, buf_b, buf_nc, _, cnt, gflag, out), _ = jax.lax.scan(
+            inner,
+            (buf_u, buf_v, buf_b, buf_nc,
+             jnp.arange(b_cap, dtype=jnp.int32), cnt, gflag, out),
+            (eids, a0, pair_tbl, jnp.arange(c, dtype=jnp.int32)),
+        )
+        return (blk + 1, buf_u, buf_v, buf_b, buf_nc, cnt, gflag, out)
+
+    init = (
+        jnp.int32(0),                          # block index
+        jnp.zeros((b_cap,), jnp.int32),        # buf_u
+        jnp.zeros((b_cap,), jnp.int32),        # buf_v
+        jnp.full((b_cap,), -1, jnp.int32),     # buf_b (-1: matches nothing)
+        jnp.zeros((b_cap,), bool),             # buf_nc (non-crossing entry)
+        jnp.int32(0),                          # cnt
+        jnp.zeros((L + 1,), bool),             # per-group flip flag
+        jnp.zeros((L,), bool),                 # out
+    )
+    _, _, _, _, _, cnt, _, out = jax.lax.while_loop(cond, outer, init)
+    return out, cnt
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_cap", "use_tree_kernel", "chunk"))
+def recover_device(
+    up: jax.Array,
+    depth_t: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    beta: jax.Array,
+    tree_mask: jax.Array,
+    crossing: jax.Array,
+    order: jax.Array,
+    phase1_accept: jax.Array,
+    group_of_edge: jax.Array,
+    dirty0: jax.Array,
+    budget: jax.Array,
+    b_cap: int,
+    edge_valid: jax.Array | None = None,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
+):
+    """Standalone jitted recovery tail (the unit bench_recovery.py times).
+
+    Same argument conventions as `recover_host` except the order is the
+    full (L,) sort permutation and `budget` is a device scalar. Returns
+    (accepted (L,) bool, n_accepted int32 scalar).
+    """
+    t = LiftingTables(up=up, depth=depth_t)
+    offtree = ~tree_mask if edge_valid is None else (~tree_mask) & edge_valid
+    return _recover_scan(
+        t, u, v, beta, offtree, crossing, order, phase1_accept,
+        group_of_edge, dirty0, jnp.asarray(budget, jnp.int32), b_cap,
+        use_tree_kernel, chunk,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_cap", "use_tree_kernel", "chunk"))
+def recover_device_batched(
+    up: jax.Array,
+    depth_t: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    beta: jax.Array,
+    tree_mask: jax.Array,
+    crossing: jax.Array,
+    order: jax.Array,
+    phase1_accept: jax.Array,
+    group_of_edge: jax.Array,
+    dirty0: jax.Array,
+    budget: jax.Array,
+    b_cap: int,
+    edge_valid: jax.Array | None = None,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
+):
+    """`recover_device` vmapped over a leading batch axis.
+
+    All array args carry a (B, ...) batch dimension (`budget` is (B,)).
+    One dispatch replays every graph's recovery — the standalone unit
+    for pipelines that keep phase-1 outputs device-resident, and the one
+    bench_recovery.py times against the sync + per-graph host loop.
+    """
+    def one(bup, bdep, bu, bv, bbeta, btree, bcross, border, bacc, bgrp,
+            bdirty, bb, bev):
+        t = LiftingTables(up=bup, depth=bdep)
+        return _recover_scan(
+            t, bu, bv, bbeta, (~btree) & bev, bcross, border, bacc, bgrp,
+            bdirty, bb, b_cap, use_tree_kernel, chunk,
+        )
+
+    if edge_valid is None:  # all-true mask ≡ the unmasked offtree
+        edge_valid = jnp.ones_like(tree_mask, dtype=bool)
+    return jax.vmap(one)(
+        up, depth_t, u, v, beta, tree_mask, crossing, order,
+        phase1_accept, group_of_edge, dirty0,
+        jnp.asarray(budget, jnp.int32), edge_valid)

@@ -16,6 +16,14 @@ This maps the scalar bucket counters of the CPU algorithm onto dense
 `radix_hist` Pallas kernel implements for the histogram phase.
 
 Everything is O(L) per pass with a 256-wide constant.
+
+Engine dispatch: the chunked one-hot radix formulation is the right
+shape for the MXU but a poor fit for CPU (dense 256-wide tiles per
+element vs a cache-friendly comparator sort — ~50x on the CI box), so
+the public argsorts pick an engine per backend: "radix" on TPU, XLA's
+stable sort elsewhere. Both are stable ascending orders of the same
+keys, hence the SAME permutation — callers cannot observe the choice
+(tests/test_sort.py pins each engine explicitly and asserts equality).
 """
 from __future__ import annotations
 
@@ -111,9 +119,21 @@ def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
     return out
 
 
-@jax.jit
-def radix_argsort_u32(keys: jax.Array) -> jax.Array:
-    """Stable ascending argsort of uint32 keys in 4 byte passes, O(L)."""
+def _default_engine() -> str:
+    return "radix" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def radix_argsort_u32(keys: jax.Array, engine: str | None = None) -> jax.Array:
+    """Stable ascending argsort of uint32 keys, O(L) on the radix engine.
+
+    engine: "radix" (4 one-hot byte passes), "xla" (backend comparator
+    sort), or None for the per-backend default. Identical permutation
+    either way (both stable ascending).
+    """
+    eng = engine or _default_engine()
+    if eng == "xla":
+        return jnp.argsort(keys, stable=True).astype(jnp.int32)
     m = keys.shape[0]
     chunk = _chunk_for(m)
     lp = _pad_len(m, chunk)
@@ -125,10 +145,16 @@ def radix_argsort_u32(keys: jax.Array) -> jax.Array:
     return perm[:m]
 
 
-@jax.jit
-def radix_argsort_u64pair(hi: jax.Array, lo: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("engine",))
+def radix_argsort_u64pair(hi: jax.Array, lo: jax.Array,
+                          engine: str | None = None) -> jax.Array:
     """Stable ascending argsort of (hi, lo) uint32 pairs — the paper's
-    8-pass INT64 sort without requiring x64 mode."""
+    8-pass INT64 sort without requiring x64 mode (engine as above)."""
+    eng = engine or _default_engine()
+    if eng == "xla":
+        p1 = jnp.argsort(lo, stable=True).astype(jnp.int32)
+        p2 = jnp.argsort(hi[p1], stable=True).astype(jnp.int32)
+        return p1[p2]
     m = hi.shape[0]
     chunk = _chunk_for(m)
     lp = _pad_len(m, chunk)

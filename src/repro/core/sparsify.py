@@ -6,12 +6,14 @@
     RES  -> root-path resistance sums -> criticality        (resistance.py)
     SORT -> 4-pass radix sort on IEEE-754 keys              (sort.py)
     MARK -> per-group greedy, basic or lockstep-parallel    (marking.py)
-    REC  -> sequential recovery of non-crossing edges       (recovery.py)
+    REC  -> greedy replay of non-crossing edges             (recovery.py)
 
-All device stages are jit-compiled; `phase1_device` additionally exposes
-the full device program as a single jittable function for the multi-pod
-dry-run. The recovery tail runs on host, mirroring the paper's own
-sequential Algorithm 6 stage.
+All stages are jit-compiled device programs. `lgrass_device` fuses the
+whole pipeline — phase 1 *and* the Algorithm-6 recovery replay — into a
+single dispatch, and `lgrass_device_batched` vmaps it over a padded
+graph batch, so the serving path never syncs to host between phases.
+The host recovery tail (`recovery.recover_host`) is retained as the
+fidelity oracle behind `recovery="host"`.
 """
 from __future__ import annotations
 
@@ -27,17 +29,19 @@ from repro.core import _host as H
 from repro.core.baseline import default_budget
 from repro.core.bfs import bfs, effective_weights, select_root
 from repro.core.graph import Graph
-from repro.core.lca import build_lifting, lca_with_shortcut
+from repro.core.lca import LiftingTables, build_lifting, lca_with_shortcut
 from repro.core.marking import (
     GroupLayout,
     Phase1Result,
     build_group_layout,
     group_keys,
     phase1_basic,
+    phase1_edge_views,
     phase1_parallel,
 )
 from repro.core.mst import boruvka_mst
-from repro.core.recovery import recover
+from repro.core.pow2 import log2_ceil, next_pow2
+from repro.core.recovery import _recover_scan, recover_host
 from repro.core.resistance import (
     criticality,
     node_parent_inv_w,
@@ -45,12 +49,15 @@ from repro.core.resistance import (
 )
 from repro.core.sort import sort_f32_desc_stable
 
+# Device recovery holds accepted edges in a (b_cap,) buffer; b_cap is a
+# compiled constant, so small budgets share one bucketed program.
+B_CAP_FLOOR = 8
 
-def _log2_ceil_host(n: int) -> int:
-    k = 1
-    while (1 << k) < n:
-        k += 1
-    return max(k, 1)
+
+def _bucket_b_cap(budgets) -> int:
+    """Static accept-buffer size covering every budget in `budgets`."""
+    need = max([int(b) for b in budgets] + [1])
+    return max(next_pow2(need), B_CAP_FLOOR)
 
 
 @dataclasses.dataclass
@@ -138,7 +145,7 @@ def phase1_device(
     parallel: bool = True,
     lift_levels: int | None = None,
 ):
-    """The full device program: EFF→MST→LCA→RES→SORT→MARK(phase 1).
+    """The phase-1 device program: EFF→MST→LCA→RES→SORT→MARK.
 
     Returns everything the host recovery tail needs. This function is the
     unit the multi-pod dry-run lowers and compiles.
@@ -171,22 +178,157 @@ def phase1_device_batched(
     )(u, v, w, edge_valid)
 
 
+def _lgrass_program(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    budget: jax.Array,
+    n: int,
+    k_cap: int,
+    parallel: bool,
+    lift_levels: int | None,
+    b_cap: int,
+    edge_valid: jax.Array | None,
+    use_tree_kernel: bool,
+    chunk: int = 32,
+):
+    """Phase 1 + device recovery fused into one program (Fig. 1b end-to-end).
+
+    The MARK outputs are scattered back to edge-id order on device
+    (`phase1_edge_views`), the global criticality order is taken over all
+    off-tree edges, and the Algorithm-6 replay runs as a lax.scan — no
+    host round-trip anywhere. Only scalars and the final masks leave the
+    device.
+    """
+    d = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, edge_valid)
+    t = LiftingTables(up=d["up"], depth=d["depth_t"])
+    tree_mask = d["tree_mask"]
+    crossing = d["crossing"]
+    accept_by_edge, group_of_edge, dirty0 = phase1_edge_views(
+        d["perm"], d["gidx"], d["accept_sorted"], d["group_overflow"],
+        crossing,
+    )
+    offtree = ~tree_mask if edge_valid is None else (~tree_mask) & edge_valid
+    keys = jnp.where(offtree, d["crit"], -jnp.inf)
+    order = sort_f32_desc_stable(keys)
+    accepted, n_accepted = _recover_scan(
+        t, u, v, d["beta"], offtree, crossing, order, accept_by_edge,
+        group_of_edge, dirty0, jnp.asarray(budget, jnp.int32), b_cap,
+        use_tree_kernel, chunk,
+    )
+    depth_fin = jnp.where(
+        d["depth_t"] == jnp.iinfo(jnp.int32).max, 0, d["depth_t"]
+    )
+    return dict(
+        tree_mask=tree_mask,
+        accepted=accepted,
+        n_accepted=n_accepted,
+        n_groups=d["n_groups"],
+        n_overflow_groups=jnp.sum(d["group_overflow"].astype(jnp.int32)),
+        n_dirty=jnp.sum(dirty0.astype(jnp.int32)),
+        tree_depth_max=jnp.max(depth_fin),
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels",
+                                    "b_cap", "use_tree_kernel", "chunk"))
+def lgrass_device(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    budget: jax.Array,
+    n: int,
+    k_cap: int = 32,
+    parallel: bool = True,
+    lift_levels: int | None = None,
+    b_cap: int = B_CAP_FLOOR,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
+):
+    """The full device program: phase 1 fused with the recovery replay.
+
+    `budget` is a traced int32 scalar (one compile serves any budget up
+    to the static buffer bound `b_cap`). Returns final masks + scalar
+    stats only — the first point data leaves the device.
+    """
+    return _lgrass_program(u, v, w, budget, n, k_cap, parallel,
+                           lift_levels, b_cap, None, use_tree_kernel, chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels",
+                                    "b_cap", "use_tree_kernel", "chunk"))
+def lgrass_device_batched(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    edge_valid: jax.Array,
+    budget: jax.Array,
+    n: int,
+    k_cap: int = 32,
+    parallel: bool = True,
+    lift_levels: int | None = None,
+    b_cap: int = B_CAP_FLOOR,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
+):
+    """`lgrass_device` vmapped over a padded batch: ONE dispatch runs
+    phase 1 *and* recovery for every graph — no host round-trip between
+    phases. `budget` is a (B,) int32 vector (per-graph budgets)."""
+    return jax.vmap(
+        lambda bu, bv, bw, bev, bb: _lgrass_program(
+            bu, bv, bw, bb, n, k_cap, parallel, lift_levels, b_cap, bev,
+            use_tree_kernel, chunk,
+        )
+    )(u, v, w, edge_valid, budget)
+
+
+def _result_from_device(d: dict, i: Optional[int], L: int) -> SparsifyResult:
+    """Slice one graph's `SparsifyResult` out of (batched) device outputs."""
+    pick = (lambda x: x[i]) if i is not None else (lambda x: x)
+    tree_mask = np.asarray(pick(d["tree_mask"])).astype(bool)[:L]
+    accepted = np.asarray(pick(d["accepted"])).astype(bool)[:L]
+    return SparsifyResult(
+        edge_mask=tree_mask | accepted,
+        tree_mask=tree_mask,
+        accepted_mask=accepted,
+        n_accepted=int(pick(d["n_accepted"])),
+        n_groups=int(pick(d["n_groups"])),
+        n_overflow_groups=int(pick(d["n_overflow_groups"])),
+        n_dirty=int(pick(d["n_dirty"])),
+    )
+
+
 def lgrass_sparsify(
     g: Graph,
     budget: Optional[int] = None,
     k_cap: int = 32,
     parallel: bool = True,
     auto_lift_bound: bool = False,
+    recovery: str = "device",
+    b_cap: Optional[int] = None,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
 ) -> SparsifyResult:
     """Run LGRASS on a host graph; returns the sparsifier edge mask.
+
+    recovery: "device" (default) runs the fused `lgrass_device` program —
+    one dispatch end-to-end; "host" runs phase 1 on device and replays
+    Algorithm 6 with the numpy oracle (`recover_host`). Both are
+    bit-identical (tests/test_recovery_device.py).
 
     auto_lift_bound: measure the tree depth first (one extra BFS) and
     build depth-bounded lifting tables — identical output, ~log(N)/log(D)
     less LCA gather traffic (§Perf 'lift_bound').
+
+    b_cap: static accept-buffer bound for device recovery; defaults to a
+    pow2 bucket of `budget` so nearby budgets share compiled programs.
     """
     n, L = g.n, g.m
     if budget is None:
         budget = default_budget(n)
+    budget = int(budget)
     u = jnp.asarray(g.u, jnp.int32)
     v = jnp.asarray(g.v, jnp.int32)
     w = jnp.asarray(g.w, jnp.float32)
@@ -202,7 +344,24 @@ def lgrass_sparsify(
         safe = 1
         while (1 << safe) <= 4 * max(dmax, 1):
             safe += 1
-        lift_levels = min(safe, _log2_ceil_host(n + 1))
+        lift_levels = min(safe, log2_ceil(n + 1))
+
+    if recovery == "device":
+        if b_cap is None:
+            b_cap = _bucket_b_cap([budget])
+        if b_cap < budget:
+            raise ValueError(f"b_cap {b_cap} < budget {budget}")
+        d = jax.device_get(lgrass_device(
+            u, v, w, jnp.int32(budget), n, k_cap, parallel, lift_levels,
+            b_cap, use_tree_kernel, chunk))
+        if lift_levels is not None:
+            if int(d["tree_depth_max"]) >= (1 << lift_levels):
+                d = jax.device_get(lgrass_device(
+                    u, v, w, jnp.int32(budget), n, k_cap, parallel, None,
+                    b_cap, use_tree_kernel, chunk))
+        return _result_from_device(d, None, L)
+    if recovery != "host":
+        raise ValueError(f"unknown recovery mode {recovery!r}")
 
     d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
                                      lift_levels))
@@ -214,18 +373,22 @@ def lgrass_sparsify(
     return _recovery_tail(g, d, budget)
 
 
-def _recovery_tail(g: Graph, d: dict, budget: int) -> SparsifyResult:
-    """Host recovery from one graph's phase-1 outputs.
+def phase1_views_np(d: dict, L: int):
+    """Numpy mirror of `marking.phase1_edge_views` + the global
+    criticality order — the glue between MARK and a host-side replay.
 
-    `d` holds numpy arrays of padded length L_pad >= g.m (node tables of
-    n_pad >= g.n); the single-graph path passes L_pad == L. Padding slots
-    are sliced away after the per-edge scatters: padding edges were kept
-    out of the tree and every crossing group on device, so real slots
-    carry exactly the unpadded values.
+    `d` holds one graph's phase-1 outputs as numpy arrays of padded
+    length L_pad >= L (slicing to the leading L real slots is exact:
+    padding edges were kept out of the tree and every crossing group on
+    device, see graph.py's padding conventions). Returns (tree_mask,
+    crossing, accept_by_edge, group_of_edge, dirty0, order) with `order`
+    the full (L,) (crit desc, id asc) permutation, off-tree edges first.
+
+    Shared by `_recovery_tail`, bench_recovery.py and the recovery parity
+    tests so there is exactly ONE host formulation to drift-check against
+    the device glue.
     """
-    n, L = g.n, g.m
     L_pad = int(d["tree_mask"].shape[0])
-    tree_mask_p = d["tree_mask"].astype(bool)
     crossing_p = d["crossing"].astype(bool)
     perm = d["perm"].astype(np.int64)
     gidx = d["gidx"].astype(np.int64)
@@ -236,25 +399,27 @@ def _recovery_tail(g: Graph, d: dict, budget: int) -> SparsifyResult:
     group_of_edge = np.full(L_pad, -1, np.int64)
     group_of_edge[perm] = gidx
     group_of_edge[~crossing_p] = -1
-    ovf_groups = d["group_overflow"].astype(bool)
     dirty0 = np.zeros(L_pad, bool)
-    cross_perm_mask = crossing_p[perm]
-    dirty_sorted = ovf_groups[gidx] & cross_perm_mask
-    dirty0[perm] = dirty_sorted
+    dirty0[perm] = d["group_overflow"].astype(bool)[gidx] & crossing_p[perm]
 
-    tree_mask = tree_mask_p[:L]
-    crossing = crossing_p[:L]
-    accept_by_edge = accept_by_edge[:L]
-    group_of_edge = group_of_edge[:L]
-    dirty0 = dirty0[:L]
-
+    tree_mask = d["tree_mask"].astype(bool)[:L]
     # global criticality order over all off-tree edges (incl. non-crossing)
-    offtree = ~tree_mask
-    keys = np.where(offtree, d["crit"][:L],
+    keys = np.where(~tree_mask, d["crit"][:L],
                     np.float32(-np.inf)).astype(np.float32)
-    crit_order = H.desc_stable_order_np(keys)[: int(offtree.sum())]
+    order = H.desc_stable_order_np(keys)
+    return (tree_mask, crossing_p[:L], accept_by_edge[:L],
+            group_of_edge[:L], dirty0[:L], order)
 
-    accepted = recover(
+
+def _recovery_tail(g: Graph, d: dict, budget: int) -> SparsifyResult:
+    """Host recovery from one graph's phase-1 outputs (the oracle tail)."""
+    n, L = g.n, g.m
+    (tree_mask, crossing, accept_by_edge, group_of_edge, dirty0,
+     order) = phase1_views_np(d, L)
+    ovf_groups = d["group_overflow"].astype(bool)
+    crit_order = order[: int((~tree_mask).sum())]
+
+    accepted = recover_host(
         n=n,
         u=g.u.astype(np.int64),
         v=g.v.astype(np.int64),
@@ -286,6 +451,10 @@ def lgrass_sparsify_batch(
     budget: Optional[int] = None,
     k_cap: int = 32,
     parallel: bool = True,
+    recovery: str = "device",
+    b_cap: Optional[int] = None,
+    use_tree_kernel: bool = False,
+    chunk: int = 32,
 ) -> list:
     """Run LGRASS on many graphs with ONE device compile + dispatch.
 
@@ -294,10 +463,13 @@ def lgrass_sparsify_batch(
     every graph; a sequence gives one budget per graph (None entries
     fall back to that graph's default).
 
-    Phase 1 runs as `phase1_device_batched` over the padded (B, L_max)
-    edge lists; the recovery tail then replays each graph on host exactly
-    as the single-graph path does. Results are bit-identical to calling
-    `lgrass_sparsify(g)` per graph (asserted in tests/test_batch.py).
+    recovery="device" (default) runs `lgrass_device_batched`: phase 1
+    AND the Algorithm-6 replay execute in the one vmapped dispatch, with
+    per-graph budgets as a traced vector — only final masks and scalar
+    stats come back to host. recovery="host" keeps the oracle path:
+    batched phase 1, then a per-graph numpy replay. Results are
+    bit-identical either way, and to per-graph `lgrass_sparsify(g)`
+    (asserted in tests/test_batch.py and tests/test_recovery_device.py).
     """
     from repro.core.graph import GraphBatch
 
@@ -309,6 +481,30 @@ def lgrass_sparsify_batch(
         raise ValueError("one budget per graph required")
     budgets = [default_budget(g.n) if b is None else int(b)
                for g, b in zip(batch.graphs, budget)]
+
+    if recovery == "device":
+        if b_cap is None:
+            b_cap = _bucket_b_cap(budgets)
+        if b_cap < max(budgets):
+            raise ValueError(f"b_cap {b_cap} < max budget {max(budgets)}")
+        d = jax.device_get(lgrass_device_batched(
+            jnp.asarray(batch.u, jnp.int32),
+            jnp.asarray(batch.v, jnp.int32),
+            jnp.asarray(batch.w, jnp.float32),
+            jnp.asarray(batch.edge_valid, bool),
+            jnp.asarray(np.asarray(budgets, np.int32)),
+            batch.n_max,
+            k_cap,
+            parallel,
+            None,
+            b_cap,
+            use_tree_kernel,
+            chunk,
+        ))
+        return [_result_from_device(d, i, g.m)
+                for i, g in enumerate(batch.graphs)]
+    if recovery != "host":
+        raise ValueError(f"unknown recovery mode {recovery!r}")
 
     d = jax.device_get(phase1_device_batched(
         jnp.asarray(batch.u, jnp.int32),

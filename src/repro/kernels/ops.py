@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.bitmap_intersect import bitmap_intersect_any as _bitmap
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.radix_hist import bucket_rank_hist as _brh
+from repro.kernels.tree_dist import tree_dist_pairs as _tdp
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -78,6 +79,23 @@ def radix_argsort_u32(keys, *, chunk=1024,
         pos = offsets[digits] + rank
         perm = jnp.zeros((m,), jnp.int32).at[pos].set(perm)
     return perm
+
+
+def tree_dist_pairs(up, depth, a, b, *, block=128,
+                    interpret: Optional[bool] = None):
+    """Tree hop distances for (M,) query pairs via the lifting-table
+    kernel. Queries are padded to a block multiple (pad lanes query node
+    0 against itself and are sliced away)."""
+    m = a.shape[0]
+    block = min(block, max(m, 1))
+    pad = (-m) % block
+    if pad:
+        z = jnp.zeros((pad,), jnp.int32)
+        a = jnp.concatenate([a.astype(jnp.int32), z])
+        b = jnp.concatenate([b.astype(jnp.int32), z])
+    out = _tdp(up, depth, a.astype(jnp.int32), b.astype(jnp.int32),
+               block=block, interpret=_auto_interpret(interpret))
+    return out[:m] if pad else out
 
 
 def bitmap_intersect_any(m1, m2, *, block=1024,

@@ -38,3 +38,15 @@ def bucket_rank_hist_ref(digits: jax.Array):
 
 def bitmap_intersect_any_ref(m1: jax.Array, m2: jax.Array) -> jax.Array:
     return jnp.any(jnp.bitwise_and(m1, m2) != 0, axis=1)
+
+
+def tree_dist_pairs_ref(up: jax.Array, depth: jax.Array, a: jax.Array,
+                        b: jax.Array) -> jax.Array:
+    """Binary-lifting tree distance: the kernel's ground truth IS the
+    production plain-gather formulation (core/lca.py), so the kernel is
+    validated against the exact code the pipeline runs — one algorithm,
+    two executions."""
+    from repro.core.lca import LiftingTables, tree_distance
+
+    return tree_distance(LiftingTables(up=up, depth=depth),
+                         a.astype(jnp.int32), b.astype(jnp.int32))

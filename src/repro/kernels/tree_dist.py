@@ -1,0 +1,85 @@
+"""Binary-lifting tree-distance kernel (Pallas TPU) — the hot gather of
+the recovery coverage test.
+
+The Algorithm-6 replay asks, per scanned edge, for tree hop distances
+from its endpoints to every buffered accepted endpoint. Each distance is
+an LCA climb: O(log n) dependent gathers from the (LOG, n) lifting
+table. On TPU a data-dependent gather is the wrong native shape; the
+dense mapping (same idiom as radix_hist.py) is a one-hot contraction —
+`table[idx]` becomes `onehot(idx) @ table` on the VPU/MXU. The whole
+lifting table stays resident in VMEM across the grid, so one kernel call
+answers a block of query pairs with zero HBM pointer chasing.
+
+VMEM bound: the kernel materialises (block, n) one-hots, so it targets
+the serving regime (n up to a few thousand per graph); ops.py picks the
+block size and pads queries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+
+def _gather(row: jax.Array, idx: jax.Array, n: int) -> jax.Array:
+    """row: (n,) int32; idx: (C,) int32 -> row[idx] via one-hot contraction."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    onehot = (idx[:, None] == cols).astype(jnp.int32)
+    return jnp.sum(onehot * row[None, :], axis=1)
+
+
+def _tree_dist_kernel(up_ref, depth_ref, a_ref, b_ref, out_ref, *,
+                      log: int, n: int):
+    up = up_ref[...]        # (LOG, n)
+    depth = depth_ref[...]  # (n,)
+    a = a_ref[...]          # (block,)
+    b = b_ref[...]
+    da = _gather(depth, a, n)
+    db = _gather(depth, b, n)
+    # lift the deeper endpoint to the shallower one's level
+    ka = jnp.maximum(da - db, 0)
+    kb = jnp.maximum(db - da, 0)
+    ca, cb = a, b
+    for i in range(log):
+        ca = jnp.where(((ka >> i) & 1) == 1, _gather(up[i], ca, n), ca)
+        cb = jnp.where(((kb >> i) & 1) == 1, _gather(up[i], cb, n), cb)
+    # descend in lockstep to just below the LCA
+    for i in range(log):
+        k = log - 1 - i
+        ua = _gather(up[k], ca, n)
+        ub = _gather(up[k], cb, n)
+        jump = (ca != cb) & (ua != ub)
+        ca = jnp.where(jump, ua, ca)
+        cb = jnp.where(jump, ub, cb)
+    w = jnp.where(ca == cb, ca, _gather(up[0], ca, n))
+    out_ref[...] = da + db - 2 * _gather(depth, w, n)
+
+
+def tree_dist_pairs(up: jax.Array, depth: jax.Array, a: jax.Array,
+                    b: jax.Array, *, block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """up: (LOG, n) int32 lifting table; depth: (n,) int32; a, b: (M,)
+    int32 query pairs. Returns (M,) int32 tree hop distances."""
+    log, n = up.shape
+    m = a.shape[0]
+    assert m % block == 0, "pad queries to a block multiple"
+    kernel = functools.partial(_tree_dist_kernel, log=log, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((log, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(up, depth, a, b)

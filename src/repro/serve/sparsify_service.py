@@ -2,13 +2,19 @@
 
 The production north star is many graphs per device dispatch, not one.
 `lgrass_sparsify_batch` already amortises compile + dispatch across a
-padded batch; this module adds the traffic-facing policy:
+padded batch — since the recovery refactor the whole pipeline (phase 1
+AND the Algorithm-6 replay) is one fused device program, so a bucket is
+served by exactly one dispatch with no host round-trip between phases.
+This module adds the traffic-facing policy:
 
   * **bucketing** — a request stream contains arbitrary (n, L) sizes,
     and every distinct padded shape is a fresh XLA compile. We round the
     pad targets up to powers of two (with a small floor), so the number
     of compiled programs is logarithmic in the size range instead of
-    linear in the number of distinct sizes seen.
+    linear in the number of distinct sizes seen. The recovery accept
+    buffer (`b_cap`) is bucketed the same way, keyed off the bucket's
+    default budget, so default-budget traffic reuses one program per
+    shape bucket.
   * **chunking** — buckets are dispatched in batches of at most
     `max_batch_size` graphs to bound device memory.
   * **batch-dim bucketing** — the leading batch axis is itself a
@@ -16,6 +22,9 @@ padded batch; this module adds the traffic-facing policy:
     with trivial placeholder graphs (dropped from the results); chunk
     sizes 5, 7, 12 share the B=8/8/16 programs instead of compiling
     three times.
+  * **warmup** — `warmup(sizes)` pre-compiles the bucket programs for
+    anticipated request shapes off the request path; compile counts and
+    wall-clock are surfaced in `ServiceStats`.
 
 Results come back in request order and are bit-identical to per-graph
 `lgrass_sparsify` (the batch path guarantees this; see
@@ -24,26 +33,25 @@ tests/test_batch.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.baseline import default_budget
 from repro.core.graph import Graph, GraphBatch
-from repro.core.sparsify import SparsifyResult, lgrass_sparsify_batch
+from repro.core.pow2 import next_pow2
+from repro.core.sparsify import (
+    SparsifyResult,
+    _bucket_b_cap,
+    lgrass_sparsify_batch,
+)
 
 
 def _placeholder_graph() -> Graph:
     """Smallest valid graph; pads the batch axis (results discarded)."""
     return Graph(n=2, u=np.array([0], np.int32), v=np.array([1], np.int32),
                  w=np.array([1.0], np.float32))
-
-
-def next_pow2(x: int) -> int:
-    """Smallest power of two >= x (x >= 1)."""
-    p = 1
-    while p < x:
-        p <<= 1
-    return p
 
 
 @dataclasses.dataclass
@@ -55,6 +63,8 @@ class ServiceStats:
     bucket_counts: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict
     )
+    n_warmup_dispatches: int = 0   # compiles triggered off the request path
+    warmup_seconds: float = 0.0
 
     @property
     def padding_overhead(self) -> float:
@@ -68,6 +78,7 @@ class SparsifyService:
     """Sparsify request batches with a bounded set of compiled shapes.
 
     >>> svc = SparsifyService()
+    >>> svc.warmup([(100, 300)])             # optional: compile off-path
     >>> results = svc.sparsify(list_of_graphs)   # request order preserved
     """
 
@@ -78,20 +89,38 @@ class SparsifyService:
         max_batch_size: int = 64,
         min_n_bucket: int = 16,
         min_L_bucket: int = 32,
+        recovery: str = "device",
     ):
         self.k_cap = k_cap
         self.parallel = parallel
         self.max_batch_size = max_batch_size
         self.min_n_bucket = min_n_bucket
         self.min_L_bucket = min_L_bucket
+        self.recovery = recovery
         self.stats = ServiceStats()
+
+    def _bucket(self, n: int, L: int) -> Tuple[int, int]:
+        """The bucketing policy, from raw sizes — the single source both
+        the request path (`bucket_key`) and `warmup` resolve through, so
+        warmed programs are exactly the ones traffic requests."""
+        return (
+            max(next_pow2(int(n)), self.min_n_bucket),
+            max(next_pow2(int(L)), self.min_L_bucket),
+        )
 
     def bucket_key(self, g: Graph) -> Tuple[int, int]:
         """(n_bucket, L_bucket): pad targets rounded up to powers of two."""
-        return (
-            max(next_pow2(g.n), self.min_n_bucket),
-            max(next_pow2(g.m), self.min_L_bucket),
-        )
+        return self._bucket(g.n, g.m)
+
+    def _b_cap(self, n_bucket: int, budgets: Sequence[int]) -> int:
+        """Accept-buffer bucket for a chunk.
+
+        Keyed off the bucket's own default budget so that default-budget
+        traffic (every graph's budget <= default_budget(n_bucket)) maps
+        to ONE compiled b_cap per shape bucket — which is also what
+        `warmup` compiles. Larger explicit budgets widen it.
+        """
+        return _bucket_b_cap(list(budgets) + [default_budget(n_bucket)])
 
     def sparsify(
         self,
@@ -134,10 +163,19 @@ class SparsifyService:
                     n_max=n_bucket,
                     L_max=L_bucket,
                 )
+                # resolve None budgets ONCE; the callee receives concrete
+                # values, so b_cap sizing and dispatch can't disagree
+                resolved = [
+                    default_budget(graphs[i].n) if budgets[i] is None
+                    else int(budgets[i])
+                    for i in chunk
+                ]
                 out = lgrass_sparsify_batch(
                     batch,
-                    budget=[budgets[i] for i in chunk] + [None] * n_fill,
+                    budget=resolved + [None] * n_fill,
                     k_cap=self.k_cap, parallel=self.parallel,
+                    recovery=self.recovery,
+                    b_cap=self._b_cap(n_bucket, resolved),
                 )
                 for i, r in zip(chunk, out):  # placeholder tail dropped
                     results[i] = r
@@ -148,3 +186,44 @@ class SparsifyService:
                     graphs[i].m for i in chunk
                 )
         return results  # type: ignore[return-value]
+
+    def warmup(
+        self,
+        sizes: Iterable[Tuple[int, int]],
+        batch_sizes: Sequence[int] = (1,),
+    ) -> int:
+        """Pre-compile bucket programs for anticipated request shapes.
+
+        sizes: (n, L) pairs of representative requests — each is rounded
+        to its bucket exactly as `sparsify` would. batch_sizes: chunk
+        sizes to warm (each padded to a pow2 batch axis, like the request
+        path). Dispatches run on placeholder graphs whose results are
+        discarded; XLA's compile cache then serves real traffic without
+        on-path compilation. Returns the number of warmup dispatches;
+        `stats.n_warmup_dispatches` / `stats.warmup_seconds` accumulate.
+        """
+        t0 = time.perf_counter()
+        done = set()
+        n_dispatched = 0
+        for (n, L) in sizes:
+            n_bucket, L_bucket = self._bucket(n, L)
+            b_cap = self._b_cap(n_bucket, [])
+            for B in batch_sizes:
+                B_pad = next_pow2(int(B))
+                sig = (n_bucket, L_bucket, B_pad, b_cap)
+                if sig in done:
+                    continue
+                done.add(sig)
+                batch = GraphBatch.from_graphs(
+                    [_placeholder_graph()] * B_pad,
+                    n_max=n_bucket, L_max=L_bucket,
+                )
+                lgrass_sparsify_batch(
+                    batch, budget=None, k_cap=self.k_cap,
+                    parallel=self.parallel, recovery=self.recovery,
+                    b_cap=b_cap,
+                )
+                n_dispatched += 1
+        self.stats.n_warmup_dispatches += n_dispatched
+        self.stats.warmup_seconds += time.perf_counter() - t0
+        return n_dispatched

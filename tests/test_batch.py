@@ -200,6 +200,42 @@ def test_sparsify_service_pads_batch_axis():
         )
 
 
+def test_sparsify_service_warmup_precompiles():
+    """warmup() compiles the bucket program off the request path; the
+    request then reuses it (no new jit cache entry) and results stay
+    exact. Warmup never touches the request-path stats."""
+    from repro.core.sparsify import lgrass_device_batched
+
+    svc = SparsifyService(parallel=False)
+    size_before = lgrass_device_batched._cache_size()
+    n_disp = svc.warmup([(20, 30), (22, 31)])  # same pow2 bucket
+    assert n_disp == 1
+    assert svc.stats.n_warmup_dispatches == 1
+    assert svc.stats.warmup_seconds > 0.0
+    assert svc.stats.n_graphs == 0 and svc.stats.n_dispatches == 0
+    size_warm = lgrass_device_batched._cache_size()
+    assert size_warm == size_before + 1
+
+    g = random_connected_graph(20, 30, seed=3)
+    [r] = svc.sparsify([g])
+    assert lgrass_device_batched._cache_size() == size_warm  # cache hit
+    assert np.array_equal(
+        r.edge_mask, lgrass_sparsify(g, parallel=False).edge_mask
+    )
+
+
+def test_sparsify_service_host_recovery_mode():
+    """The oracle tail stays available behind recovery='host'."""
+    graphs = [random_connected_graph(20, 30, seed=s) for s in range(2)]
+    svc = SparsifyService(parallel=False, recovery="host")
+    for g, r in zip(graphs, svc.sparsify(graphs, budget=4)):
+        assert np.array_equal(
+            r.edge_mask,
+            lgrass_sparsify(g, budget=4, parallel=False,
+                            recovery="host").edge_mask,
+        )
+
+
 def test_sparsify_service_mixed_budgets():
     graphs = _mixed_families()[:3]
     svc = SparsifyService(parallel=False)

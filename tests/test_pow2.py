@@ -1,0 +1,36 @@
+"""Shared pow2 helpers (core/pow2.py) — the single home consolidating the
+former per-module copies (core/sparsify.py, serve/sparsify_service.py,
+core/lca.py, core/_host.py)."""
+import pytest
+
+from repro.core.pow2 import log2_ceil, next_pow2
+
+
+def test_next_pow2_known_values():
+    assert [next_pow2(x) for x in (1, 2, 3, 4, 5, 63, 64, 65, 1023)] == [
+        1, 2, 4, 4, 8, 64, 64, 128, 1024]
+
+
+def test_log2_ceil_known_values():
+    assert [log2_ceil(n) for n in (1, 2, 3, 4, 5, 64, 65)] == [
+        1, 1, 2, 2, 3, 6, 7]
+
+
+@pytest.mark.parametrize("n", list(range(1, 200)) + [2**20 - 1, 2**20 + 1])
+def test_pow2_invariants(n):
+    p = next_pow2(n)
+    assert p >= n and p & (p - 1) == 0          # pow2 upper bound
+    assert n == 1 or p // 2 < n                 # tight
+    k = log2_ceil(n)
+    assert (1 << k) >= n and k >= 1
+    if n >= 2:
+        assert (1 << k) == p                    # the two helpers agree
+
+
+def test_consumers_share_one_implementation():
+    from repro.core import lca, sparsify
+    from repro.serve import sparsify_service
+
+    assert sparsify_service.next_pow2 is next_pow2
+    assert sparsify.next_pow2 is next_pow2
+    assert lca._log2_ceil is log2_ceil

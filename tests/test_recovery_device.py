@@ -1,0 +1,173 @@
+"""Device recovery parity: the fused `lgrass_device` replay must be
+BIT-IDENTICAL to the host `recover_host` oracle and to `baseline.py`
+across graph families — including the overflow-dirty (k_cap=1) and
+budget-exhaustion paths — and the standalone `recover_device` must agree
+when driven directly from phase-1 outputs.
+
+Shapes are deliberately reused across cases so the sweep costs a handful
+of XLA compiles, not one per case (budgets are drawn from pow2-bucketed
+values for the same reason).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _prop import cases, integers, sampled_from
+from repro.core import (baseline_sparsify, lgrass_sparsify,
+                        lgrass_sparsify_batch, recover_device)
+from repro.core.graph import (feeder_like_graph, powergrid_like_graph,
+                              random_connected_graph)
+from repro.core.sparsify import phase1_device, phase1_views_np
+
+
+def _assert_triple(g, budget, **kw):
+    """device ≡ host ≡ baseline, masks and stats."""
+    base = baseline_sparsify(g, budget=budget)
+    host = lgrass_sparsify(g, budget=budget, recovery="host", **kw)
+    dev = lgrass_sparsify(g, budget=budget, recovery="device", **kw)
+    assert np.array_equal(base.edge_mask, host.edge_mask)
+    assert np.array_equal(base.edge_mask, dev.edge_mask)
+    assert np.array_equal(host.tree_mask, dev.tree_mask)
+    assert np.array_equal(host.accepted_mask, dev.accepted_mask)
+    assert dev.n_accepted == host.n_accepted
+    assert dev.n_groups == host.n_groups
+    assert dev.n_overflow_groups == host.n_overflow_groups
+    assert dev.n_dirty == host.n_dirty
+    return dev
+
+
+@pytest.mark.parametrize(
+    "seed,weight,budget",
+    cases(integers(0, 100_000), sampled_from(["lognormal", "ties"]),
+          sampled_from([3, 7, 12]), n_cases=12, seed=31),
+)
+def test_device_recovery_parity_sweep(seed, weight, budget):
+    g = random_connected_graph(36, 80, seed=seed, weight=weight)
+    _assert_triple(g, budget)
+
+
+@pytest.mark.parametrize("parallel", [True, False])
+def test_device_recovery_both_schedules(parallel):
+    g = random_connected_graph(45, 90, seed=1, weight="ties")
+    _assert_triple(g, 8, parallel=parallel)
+
+
+def test_device_recovery_powergrid():
+    _assert_triple(powergrid_like_graph(6, 0.4, seed=2), 10)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_device_recovery_feeder_noncross_heavy(seed):
+    """Chain-heavy feeder graphs accept NON-crossing edges, so the
+    replay's after-effects machinery does real work: the host oracle
+    propagates ball dirt eagerly, the device scan derives it lazily
+    (covered-by-accepted-noncross) — both must land bit-identically."""
+    g = feeder_like_graph(96, 48, span=6, seed=seed)
+    base = baseline_sparsify(g, budget=6)
+    # the family does what it claims: non-crossing edges get accepted
+    assert (~base.crossing[base.accepted]).sum() >= 1
+    _assert_triple(g, 6)
+
+
+def test_device_recovery_overflow_dirty():
+    """k_cap=1 overflows nearly every group: device recovery must replay
+    the fully-dirty groups exactly."""
+    g = random_connected_graph(40, 110, seed=9)
+    dev = _assert_triple(g, 20, k_cap=1)
+    assert dev.n_overflow_groups > 0
+    assert dev.n_dirty > 0
+
+
+def test_device_recovery_budget_exhaustion():
+    """Both budget cut (count hits budget) and budget excess (greedy runs
+    dry before the cut) must match."""
+    g = random_connected_graph(36, 80, seed=4)
+    cut = _assert_triple(g, 3)
+    assert cut.n_accepted == 3  # the scan's budget gate actually fired
+    g2 = random_connected_graph(24, 12, seed=4)  # 12 off-tree edges
+    excess = _assert_triple(g2, 20)  # budget > off-tree count
+    assert excess.n_accepted < 20  # greedy ran dry below the budget
+
+
+def test_device_recovery_batched_matches_host_tail():
+    graphs = [
+        random_connected_graph(30, 60, seed=0, weight="lognormal"),
+        powergrid_like_graph(6, 0.4, seed=3),
+        random_connected_graph(45, 110, seed=1, weight="ties"),
+    ]
+    dev = lgrass_sparsify_batch(graphs, budget=6, recovery="device")
+    host = lgrass_sparsify_batch(graphs, budget=6, recovery="host")
+    for g, rd, rh in zip(graphs, dev, host):
+        assert np.array_equal(rd.edge_mask, rh.edge_mask)
+        assert np.array_equal(
+            rd.edge_mask, baseline_sparsify(g, budget=6).edge_mask
+        )
+        assert (rd.n_accepted, rd.n_groups, rd.n_overflow_groups,
+                rd.n_dirty) == (rh.n_accepted, rh.n_groups,
+                                rh.n_overflow_groups, rh.n_dirty)
+
+
+def test_recover_device_standalone_from_phase1():
+    """Drive `recover_device` directly from phase-1 outputs (the unit
+    bench_recovery.py times) and compare against the host oracle."""
+    g = random_connected_graph(36, 80, seed=7)
+    budget = 7
+    u = jnp.asarray(g.u, jnp.int32)
+    v = jnp.asarray(g.v, jnp.int32)
+    w = jnp.asarray(g.w, jnp.float32)
+    d = {k: np.asarray(val)
+         for k, val in phase1_device(u, v, w, g.n).items()}
+    tree, crossing, accept, group, dirty0, full_order = phase1_views_np(
+        d, g.m)
+    want = lgrass_sparsify(g, budget=budget, recovery="host").accepted_mask
+
+    got, n_acc = recover_device(
+        jnp.asarray(d["up"]), jnp.asarray(d["depth_t"]), u, v,
+        jnp.asarray(d["beta"]), jnp.asarray(tree), jnp.asarray(crossing),
+        jnp.asarray(full_order.astype(np.int32)), jnp.asarray(accept),
+        jnp.asarray(group.astype(np.int32)), jnp.asarray(dirty0),
+        jnp.int32(budget), b_cap=8,
+    )
+    assert np.array_equal(np.asarray(got), want)
+    assert int(n_acc) == int(want.sum())
+
+
+def test_feeder_like_graph_clamps_unreachable_chords():
+    """Chord requests beyond the span-reachable pair count must clamp,
+    not spin the rejection loop forever."""
+    g = feeder_like_graph(50, 10_000, span=5, seed=0)
+    g.validate()
+    assert g.m - (g.n - 1) == sum(50 - d for d in range(2, 6))
+
+
+def test_recover_device_budget_clamped_to_b_cap():
+    """The traced-budget precondition (b_cap >= budget) cannot raise in
+    jit; the scan clamps instead, yielding the exact b_cap-budget replay
+    rather than a corrupted buffer."""
+    g = random_connected_graph(36, 80, seed=2)
+    over = lgrass_sparsify(g, budget=4, recovery="host")
+    d = {k: np.asarray(val) for k, val in phase1_device(
+        jnp.asarray(g.u, jnp.int32), jnp.asarray(g.v, jnp.int32),
+        jnp.asarray(g.w, jnp.float32), g.n).items()}
+    tree, crossing, accept, group, dirty0, order = phase1_views_np(d, g.m)
+    got, n_acc = recover_device(
+        jnp.asarray(d["up"]), jnp.asarray(d["depth_t"]),
+        jnp.asarray(g.u, jnp.int32), jnp.asarray(g.v, jnp.int32),
+        jnp.asarray(d["beta"]), jnp.asarray(tree), jnp.asarray(crossing),
+        jnp.asarray(order.astype(np.int32)), jnp.asarray(accept),
+        jnp.asarray(group.astype(np.int32)), jnp.asarray(dirty0),
+        jnp.int32(9), b_cap=4,  # budget 9 > b_cap 4 -> clamped to 4
+    )
+    assert np.array_equal(np.asarray(got), over.accepted_mask)
+    assert int(n_acc) == over.n_accepted
+
+
+def test_device_recovery_tree_kernel_parity():
+    """The Pallas tree-distance kernel path (interpret mode on CPU) is
+    bit-identical inside the fused program."""
+    g = random_connected_graph(24, 40, seed=5)
+    host = lgrass_sparsify(g, budget=5, recovery="host")
+    dev = lgrass_sparsify(g, budget=5, recovery="device",
+                          use_tree_kernel=True)
+    assert np.array_equal(host.edge_mask, dev.edge_mask)

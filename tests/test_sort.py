@@ -23,29 +23,49 @@ def test_float_key_monotone():
     assert np.array_equal(xs[order_f], xs[order_k])
 
 
+@pytest.mark.parametrize("engine", ["radix", "xla", None])
 @pytest.mark.parametrize("n", [1, 7, 256, 1024, 5000])
-def test_radix_u32_matches_numpy(n):
+def test_radix_u32_matches_numpy(n, engine):
     rng = np.random.default_rng(n)
     keys = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
-    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys)))
+    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys), engine=engine))
     assert np.array_equal(keys[perm], np.sort(keys))
 
 
-def test_radix_u32_stable():
+@pytest.mark.parametrize("engine", ["radix", "xla", None])
+def test_radix_u32_stable(engine):
     rng = np.random.default_rng(0)
     keys = rng.integers(0, 4, 2000, dtype=np.uint32)  # heavy ties
-    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys)))
+    perm = np.asarray(radix_argsort_u32(jnp.asarray(keys), engine=engine))
     ref = np.argsort(keys, kind="stable")
     assert np.array_equal(perm, ref)
 
 
-def test_radix_u64pair():
+@pytest.mark.parametrize("engine", ["radix", "xla", None])
+def test_radix_u64pair(engine):
     rng = np.random.default_rng(1)
     hi = rng.integers(0, 3, 1500, dtype=np.uint32)
     lo = rng.integers(0, 2 ** 32, 1500, dtype=np.uint32)
-    perm = np.asarray(radix_argsort_u64pair(jnp.asarray(hi), jnp.asarray(lo)))
+    perm = np.asarray(radix_argsort_u64pair(jnp.asarray(hi), jnp.asarray(lo),
+                                            engine=engine))
     key = hi.astype(np.uint64) << np.uint64(32) | lo.astype(np.uint64)
     assert np.array_equal(perm, np.argsort(key, kind="stable"))
+
+
+def test_engines_identical_permutation():
+    """The engine choice must be unobservable: same stable permutation
+    for heavy-tie and distinct keys alike."""
+    rng = np.random.default_rng(7)
+    for n in (1, 300, 2048):
+        keys = jnp.asarray(rng.integers(0, 5, n, dtype=np.uint32))
+        assert np.array_equal(
+            np.asarray(radix_argsort_u32(keys, engine="radix")),
+            np.asarray(radix_argsort_u32(keys, engine="xla")))
+        hi = jnp.asarray(rng.integers(0, 3, n, dtype=np.uint32))
+        lo = jnp.asarray(rng.integers(0, 7, n, dtype=np.uint32))
+        assert np.array_equal(
+            np.asarray(radix_argsort_u64pair(hi, lo, engine="radix")),
+            np.asarray(radix_argsort_u64pair(hi, lo, engine="xla")))
 
 
 def test_desc_stable():

@@ -1,0 +1,134 @@
+"""Phase-1 marking schedules in isolation (the stage PR "chunked" moved).
+
+Workload: the synthetic 4K-node power-grid case (official case1 shape) —
+the regime the acceptance bar names — plus a smaller mixed case under
+--smoke for CI. The pipeline up to the sorted group layout (EFF → MST →
+LCA → RES → SORT) runs once; each schedule then re-runs ONLY the MARK
+stage as its own jitted unit on identical inputs, so the timings isolate
+the scheduler:
+
+  * scan/basic     — one lax.scan step per sorted slot (L steps).
+  * scan/parallel  — rank-lockstep over groups (max-group-size steps).
+  * chunked        — ceil(n_crossing / C) blocks, one batched LCA per
+    block + arithmetic inner scan (this PR), lifting-climb distances.
+  * chunked+euler  — same blocks, Euler-tour O(1)-LCA distance backend
+    (the pipeline DEFAULT: use_euler_lca=True).
+
+The scan schedules pay hundreds of per-slot steps of gather-bound tiny
+ops on CPU, so they are timed with a single rep (they are the slow side
+by orders of magnitude at 4K; rep noise cannot flip the comparison).
+
+    PYTHONPATH=src python benchmarks/bench_phase1.py [--smoke]
+"""
+import argparse
+import functools
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import powergrid_like_graph
+from repro.core.lca import LiftingTables, build_euler
+from repro.core.marking import (GroupLayout, phase1_basic, phase1_chunked,
+                                phase1_parallel)
+from repro.core.pow2 import auto_chunk
+from repro.core.sparsify import phase1_device
+
+
+def _time(fn, reps):
+    jax.block_until_ready(fn())  # warm the jit
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+@functools.partial(jax.jit, static_argnames=("engine", "k_cap", "chunk"))
+def _mark_only(up, depth_t, su, sv, sbeta, layout, euler, engine,
+               k_cap=32, chunk=32):
+    """The MARK stage as a standalone jitted unit (inputs precomputed)."""
+    t = LiftingTables(up=up, depth=depth_t)
+    if engine == "basic":
+        return phase1_basic(t, su, sv, sbeta, layout, k_cap=k_cap)
+    if engine == "parallel":
+        return phase1_parallel(t, su, sv, sbeta, layout, k_cap=k_cap)
+    return phase1_chunked(t, su, sv, sbeta, layout, k_cap=k_cap,
+                          chunk=chunk, euler=euler)
+
+
+def run(quick: bool = False):
+    reps = 2 if quick else 3
+    n_side = 20 if quick else 64  # 400 vs 4096 nodes (case1 shape)
+    g = powergrid_like_graph(n_side, 0.25, seed=101)
+    u = jnp.asarray(g.u, jnp.int32)
+    v = jnp.asarray(g.v, jnp.int32)
+    w = jnp.asarray(g.w, jnp.float32)
+
+    # the common prefix, run once: everything up to the sorted layout
+    d = phase1_device(u, v, w, g.n, schedule="chunked")
+    jax.block_until_ready(d)
+    up, depth_t = d["up"], d["depth_t"]
+    perm = d["perm"]
+    su, sv = u[perm], v[perm]
+    sbeta = d["beta"][perm]
+    crossing = d["crossing"]
+    active = crossing[perm]
+    m = int(g.m)
+    layout = GroupLayout(
+        perm=perm, gidx=d["gidx"],
+        group_start=jnp.full((m,), jnp.int32(m)).at[d["gidx"]].min(
+            jnp.arange(m, dtype=jnp.int32)),
+        group_size=jnp.zeros((m,), jnp.int32).at[d["gidx"]].add(1),
+        active=active, n_groups=d["n_groups"])
+    # root is recoverable as the depth-0 node of the spanning tree
+    root = jnp.argmin(jnp.where(depth_t == jnp.iinfo(jnp.int32).max,
+                                jnp.iinfo(jnp.int32).max, depth_t))
+    euler = build_euler(d["parent_t"], depth_t, root.astype(jnp.int32),
+                        g.n)
+    jax.block_until_ready(euler)
+    chunk = auto_chunk(m)
+
+    def mark(engine, use_euler=False):
+        e = euler if use_euler else None
+        return lambda: _mark_only(up, depth_t, su, sv, sbeta, layout, e,
+                                  engine, chunk=chunk)
+
+    # correctness first: all engines agree on this input
+    ref = np.asarray(mark("basic")()[0])
+    for eng, use_e in (("parallel", False), ("chunked", False),
+                       ("chunked", True)):
+        got = np.asarray(mark(eng, use_e)()[0])
+        assert np.array_equal(ref, got), (eng, use_e)
+
+    t_basic = _time(mark("basic"), 1)       # the slow side: 1 rep
+    t_par = _time(mark("parallel"), 1)
+    t_chk = _time(mark("chunked"), reps)
+    t_eul = _time(mark("chunked", True), reps)  # the pipeline DEFAULT
+    cfg = f"n={g.n} L={m} chunk={chunk}"
+    return [
+        ("phase1.mark.scan_basic_us", t_basic * 1e6, cfg),
+        ("phase1.mark.scan_parallel_us", t_par * 1e6, cfg),
+        ("phase1.mark.chunked_lifting_us", t_chk * 1e6, cfg),
+        ("phase1.mark.chunked_euler_us", t_eul * 1e6,
+         cfg + " (default)"),
+        ("phase1.mark.speedup_vs_basic", 0.0, round(t_basic / t_eul, 2)),
+        ("phase1.mark.speedup_vs_parallel", 0.0, round(t_par / t_eul, 2)),
+        ("phase1.mark.euler_vs_lifting", 0.0, round(t_chk / t_eul, 2)),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps (CI smoke job)")
+    args = ap.parse_args()
+    rows = run(quick=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    sp = rows[4][2]
+    print(f"chunked marking (default engine) is {sp}x the basic scan "
+          f"({'WIN' if sp >= 2 else 'MISS'} vs the 2x bar)")

@@ -27,6 +27,14 @@ removing the sync + per-graph python, and grow with batch size. On an
 accelerator the gap widens further because the host path's sync cost
 is a real transfer, not a memcpy.
 
+Since the phase-1 chunking PR the e2e rows compare two paths that both
+run the chunked+Euler marking schedule, and the fused device path
+additionally backs its recovery cover tables with the same Euler
+tables — that flip is what moved e2e past parity (~1.33x at smoke
+sizes). At the full sizes the comparison re-approaches parity (~1.1x)
+because feeder chains make the two level-synchronous BFS passes the
+dominant shared cost (diameter ~n; see the ROADMAP item).
+
     PYTHONPATH=src python benchmarks/bench_recovery.py [--smoke]
 """
 import argparse

@@ -188,3 +188,47 @@ def tree_adjacency(parent, n):
             adj[c].append(p)
             adj[p].append(c)
     return adj
+
+
+def phase1_np(up, depth_t, su, sv, sbeta, gidx, active, k_cap):
+    """Numpy oracle for phase-1 marking — mirrors every device schedule.
+
+    Inputs are the *sorted-slot* views (marking.GroupLayout order):
+    su/sv/sbeta the edge endpoints and ball radii per sorted slot, gidx
+    the dense group index, `active` the crossing-slot mask. Replays the
+    per-group greedy sequentially: accept a slot iff no *stored* earlier
+    same-group accept covers its ball pair (tree distances via the
+    binary-lifting tables); store at most k_cap accepts per group; an
+    accept past k_cap only raises the group's overflow flag, exactly as
+    `phase1_basic`/`phase1_parallel`/`phase1_chunked` do on device.
+
+    Returns (accept (L,) bool per sorted slot, overflow (L,) bool per
+    dense group index) — the `Phase1Result` layout.
+    """
+    m = len(su)
+    accept = np.zeros(m, bool)
+    overflow = np.zeros(m, bool)
+    stored: dict = {}
+    for i in range(m):
+        if not active[i]:
+            continue
+        g = int(gidx[i])
+        lst = stored.setdefault(g, [])
+        x, y, b = int(su[i]), int(sv[i]), int(sbeta[i])
+        covered = False
+        for (au, av, ab) in lst:
+            dxu = int(tree_dist_np(up, depth_t, x, au))
+            dxv = int(tree_dist_np(up, depth_t, x, av))
+            dyu = int(tree_dist_np(up, depth_t, y, au))
+            dyv = int(tree_dist_np(up, depth_t, y, av))
+            if (dxu <= ab and dyv <= ab) or (dxv <= ab and dyu <= ab):
+                covered = True
+                break
+        if covered:
+            continue
+        accept[i] = True
+        if len(lst) >= k_cap:
+            overflow[g] = True
+        else:
+            lst.append((x, y, b))
+    return accept, overflow

@@ -11,6 +11,19 @@ the IPCC inputs answers the majority of queries in O(1).
 
 Tables are (LOG, n) int32 in HBM; every query round is a gather — exactly
 the access pattern TPUs stream well.
+
+Two query engines live here:
+
+  * binary lifting (`LiftingTables`, `lca`) — O(log depth) gathers per
+    query, cheap O(n log n) construction (one scan).
+  * Euler tour + sparse-table RMQ (`EulerLCA`, `lca_euler`) — O(1)
+    gathers per query after an O(n log n) device-side construction: the
+    tour is derived from per-arc successor pointers ranked by pointer
+    doubling (the classic list-ranking formulation, fully vectorised),
+    and range-minimum queries over the tour's depth sequence answer LCA
+    with two sparse-table gathers. Worth building once per graph when a
+    stage issues many batched distance queries (the chunked phase-1
+    marking scheduler's cover tables).
 """
 from __future__ import annotations
 
@@ -114,3 +127,133 @@ def lca_with_shortcut(
     different = sa != sb
     full = lca(t, a, b)
     return jnp.where(different, root, full)
+
+
+class EulerLCA(NamedTuple):
+    """Euler tour + sparse-table RMQ — O(1) gathers per LCA query.
+
+    Sized for a tree over <= n nodes: P = 2n - 1 tour positions. With a
+    padded node range (batched pipeline) only the reachable tree is
+    toured; trailing positions carry INT32_MAX depth so range minima
+    never select them.
+    """
+
+    tour: jax.Array   # (P,) int32 — node at each tour position
+    dseq: jax.Array   # (P,) int32 — depth along the tour (INF past the end)
+    first: jax.Array  # (n,) int32 — first tour position of each node
+    table: jax.Array  # (LOGP, P) int32 — position of the depth min in
+    #                   [i, i + 2^k) (clamped at the tour end)
+    depth: jax.Array  # (n,) int32 — node depths (distance arithmetic)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def build_euler(parent: jax.Array, depth: jax.Array, root: jax.Array,
+                n: int) -> EulerLCA:
+    """Build the Euler-tour LCA tables on device.
+
+    parent/depth: tree BFS outputs ((n,) int32, parent < 0 for the root
+    and for unreachable padding nodes — only the reachable tree is
+    toured). The tour is the node sequence of a DFS that orders children
+    by ascending id; it is materialised without any sequential DFS:
+
+      1. per-arc successor pointers (enter-first-child / advance-to-next-
+         sibling / retreat-to-parent) from two scatter passes over the
+         (parent, id)-sorted child list,
+      2. arc positions by pointer-doubling list ranking (log rounds of
+         gathers over the 2n arc slots),
+      3. one scatter builds the node sequence; a scatter-min gives each
+         node's first occurrence,
+      4. a sparse table of range-depth-min positions over the tour.
+    """
+    from repro.core.sort import radix_argsort_u64pair
+
+    P = 2 * n - 1
+    INF = jnp.iinfo(jnp.int32).max
+    nodes = jnp.arange(n, dtype=jnp.int32)
+    valid_c = parent >= 0
+
+    # -- 1. successor pointers ------------------------------------------
+    # children sorted by (parent, id); invalid entries sort last
+    hi = jnp.where(valid_c, parent.astype(jnp.uint32),
+                   jnp.uint32(0xFFFFFFFF))
+    S = radix_argsort_u64pair(hi, nodes.astype(jnp.uint32))
+    Sv = valid_c[S]
+    Sp = jnp.where(Sv, parent[S], -1)
+    is_first = Sv & ((nodes == 0) | (Sp != jnp.roll(Sp, 1)))
+    first_child = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_first, Sp, n)].set(S, mode="drop")
+    has_next = (nodes < n - 1) & Sv & (Sp == jnp.roll(Sp, -1))
+    next_sib = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(has_next, S, n)].set(jnp.roll(S, -1), mode="drop")
+
+    # arc ids: down-arc of c (parent -> c) is c; up-arc (c -> parent) is
+    # n + c. After entering c: descend to its first child, else climb
+    # back. After leaving c: advance to its next sibling, else keep
+    # climbing; the up-arc of the root's last child terminates the tour
+    # (successor = itself, the list-ranking sentinel).
+    arc_ids = jnp.arange(2 * n, dtype=jnp.int32)
+    succ_down = jnp.where(first_child >= 0, first_child, n + nodes)
+    at_end = (parent == root) & (next_sib < 0)
+    succ_up = jnp.where(
+        next_sib >= 0, next_sib,
+        jnp.where(at_end, n + nodes, n + jnp.maximum(parent, 0)),
+    )
+    arc_valid = jnp.concatenate([valid_c, valid_c])
+    succ = jnp.where(arc_valid,
+                     jnp.concatenate([succ_down, succ_up]), arc_ids)
+
+    # -- 2. list ranking by pointer doubling ----------------------------
+    d = jnp.where(succ != arc_ids, 1, 0).astype(jnp.int32)
+    nxt = succ
+    for _ in range(_log2_ceil(2 * n) + 1):
+        d = d + d[nxt]
+        nxt = nxt[nxt]
+    start = jnp.maximum(first_child[root], 0)  # root's first down-arc
+    T = jnp.where(first_child[root] >= 0, d[start] + 1, 0)  # tour arcs
+    pos = T - 1 - d  # pos[start] == 0; invalid arcs masked below
+
+    # -- 3. node sequence, depth sequence, first occurrences ------------
+    heads = jnp.concatenate([nodes, jnp.maximum(parent, 0)])
+    wpos = jnp.where(arc_valid, pos + 1, P)
+    tour = (jnp.zeros((P,), jnp.int32).at[0].set(root)
+            .at[wpos].set(heads, mode="drop"))
+    piota = jnp.arange(P, dtype=jnp.int32)
+    real = piota <= T  # positions 0..T hold the tour (length T + 1)
+    dseq = jnp.where(real, depth[tour], INF)
+    first = jnp.full((n,), P - 1, jnp.int32).at[
+        jnp.where(real, tour, n)].min(piota, mode="drop")
+
+    # -- 4. sparse table of range-depth-min positions -------------------
+    tabs = [piota]
+    for k in range(1, _log2_ceil(P) + 1 if P > 1 else 1):
+        h = 1 << (k - 1)
+        prev = tabs[-1]
+        other = prev[jnp.minimum(piota + h, P - 1)]
+        tabs.append(jnp.where(dseq[other] < dseq[prev], other, prev))
+    return EulerLCA(tour=tour, dseq=dseq, first=first,
+                    table=jnp.stack(tabs), depth=depth)
+
+
+@jax.jit
+def lca_euler(e: EulerLCA, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Vectorised LCA in O(1) gathers per query (any query shape)."""
+    logp, P = e.table.shape
+    l = jnp.minimum(e.first[a], e.first[b])
+    r = jnp.maximum(e.first[a], e.first[b])
+    span = r - l + 1
+    # floor(log2(span)) without clz: count the powers of two <= span
+    k = jnp.zeros_like(span)
+    for j in range(1, logp):
+        k = k + (span >= (1 << j)).astype(span.dtype)
+    flat = e.table.reshape(-1)
+    i1 = flat[k * P + l]
+    i2 = flat[k * P + (r + 1 - jnp.left_shift(jnp.int32(1), k))]
+    w = jnp.where(e.dseq[i2] < e.dseq[i1], i2, i1)
+    return e.tour[w]
+
+
+@jax.jit
+def tree_distance_euler(e: EulerLCA, a: jax.Array,
+                        b: jax.Array) -> jax.Array:
+    w = lca_euler(e, a, b)
+    return e.depth[a] + e.depth[b] - 2 * e.depth[w]

@@ -14,14 +14,31 @@ insight is twofold:
 TPU adaptation: instead of per-thread dynamic task queues we keep a
 bounded table of accepted edges per group, (G, K) in HBM, and evaluate the
 cover test *analytically* — dist(x, u_j) <= beta_j via batched LCA — which
-replaces ball materialisation (pointer chasing) with dense gathers. Two
+replaces ball materialisation (pointer chasing) with dense gathers. Three
 schedules are provided:
 
+  * `phase1_chunked`  — the default: sorted slots are processed in
+    blocks of C. Per block, ONE batched LCA call builds the cover table
+    of all block candidates against (a) each slot's per-group accepted-
+    buffer snapshot and (b) every other block slot; an arithmetic-only
+    inner lax.scan then replays the block's accept/reject decisions with
+    pure table lookups (no per-slot gathers), and the per-(L, K) tables
+    are updated with one batched scatter per block. Crossing slots
+    occupy a prefix of the sorted layout, so the outer while_loop runs
+    ceil(n_crossing / C) blocks — the step count collapses from L to
+    n_crossing / C (pdGRASS's density-aware batching, mapped from
+    thread queues to lane blocks).
   * `phase1_basic`    — one lax.scan over edges in global criticality
     order (the paper's "basic LGRASS", Fig. 1b).
   * `phase1_parallel` — rank-lockstep over groups: at step r every group
     processes its r-th edge simultaneously (the paper's parallel edge
     marking, Fig. 2, mapped from thread-parallel to lane-parallel).
+
+All three schedules are bit-identical (groups are independent and each
+schedule preserves the within-group criticality order; tests/
+test_marking_chunked.py sweeps them against the numpy oracle). The
+`run_phase1` dispatcher selects one via `schedule="chunked" | "scan"`
+(the latter picking basic or lockstep via `parallel`).
 
 Groups whose accepted count exceeds K overflow; the host recovery stage
 (recovery.py) re-checks those exactly, so K is a performance knob, never a
@@ -33,13 +50,23 @@ exactly as the paper keeps that stage sequential (Fig. 1c).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.lca import LiftingTables, kth_ancestor, lca, subroot
+from repro.core.lca import (
+    EulerLCA,
+    LiftingTables,
+    kth_ancestor,
+    lca,
+    subroot,
+    tree_distance,
+    tree_distance_euler,
+)
+from repro.core.pow2 import auto_chunk
 from repro.core.sort import (
+    block_view,
     float32_sort_key,
     radix_argsort_u32,
     radix_argsort_u64pair,
@@ -108,10 +135,23 @@ def build_group_layout(
     inactive (UMAX, UMAX) tail group together with tree / non-crossing
     edges, where `active` is False, so phase 1 never inspects them and
     the dense group indices of real crossing groups are unchanged.
+
+    Degenerate inputs are well-defined: with L == 0 (an isolated-node
+    graph) every field is empty and n_groups == 0 — the static-shape
+    branch below exists because `.at[0]` on an empty array raises even
+    under jit. With zero crossing edges (star / chain topologies) the
+    whole layout is the single inactive (UMAX, UMAX) tail group:
+    `active` is all-False, so no schedule ever inspects a slot and no
+    garbage reaches recovery (tests/test_marking_chunked.py pins both).
     """
     if edge_valid is not None:
         crossing = crossing & edge_valid
     m = crit.shape[0]
+    if m == 0:
+        zi = jnp.zeros((0,), jnp.int32)
+        return GroupLayout(perm=zi, gidx=zi, group_start=zi, group_size=zi,
+                           active=jnp.zeros((0,), bool),
+                           n_groups=jnp.int32(0))
     p1 = sort_f32_desc_stable(jnp.where(crossing, crit, -jnp.inf))
     p2 = radix_argsort_u64pair(hi[p1], lo[p1])  # stable => keeps crit order
     perm = p1[p2]
@@ -131,6 +171,57 @@ def build_group_layout(
         group_size=group_size,
         active=active,
         n_groups=gidx[-1] + 1,
+    )
+
+
+def ball_pair_table(
+    t: LiftingTables,
+    xs: jax.Array,
+    ys: jax.Array,
+    cols_u: jax.Array,
+    cols_v: jax.Array,
+    cols_b: jax.Array,
+    use_tree_kernel: bool = False,
+    euler: Optional[EulerLCA] = None,
+) -> jax.Array:
+    """Ball-pair cover table for a block of edges vs a set of candidates.
+
+    xs, ys: (C,) block edge endpoints. cols_*: candidate accepted edges
+    (u, v, beta) — either (K,) shared across the block (recovery's
+    buffer snapshot ++ block endpoints) or (C, K) per-row (phase 1's
+    per-group accepted-buffer gathers). Returns (C, K) bool — candidate
+    j's ball pair covers block edge i:
+
+        cover <=> (d(x,u_j) <= b_j and d(y,v_j) <= b_j) or swapped.
+
+    The 4·C·K tree distances are ONE fused batched query — a binary-
+    lifting climb by default, the Euler-tour O(1)-LCA sparse table when
+    `euler` is given, or the Pallas tree-distance kernel under
+    `use_tree_kernel`. This is where chunked schedules pay for their
+    blocks: the climb's sequential latency is amortised over the whole
+    (C, K) table instead of one edge's row.
+    """
+    c = xs.shape[0]
+    k = cols_u.shape[-1]
+    if cols_u.ndim == 1:
+        cols_u = jnp.broadcast_to(cols_u[None, :], (c, k))
+        cols_v = jnp.broadcast_to(cols_v[None, :], (c, k))
+        cols_b = jnp.broadcast_to(cols_b[None, :], (c, k))
+    qa = jnp.broadcast_to(jnp.stack([xs, ys, xs, ys])[:, :, None],
+                          (4, c, k))
+    qb = jnp.stack([cols_u, cols_v, cols_v, cols_u])
+    if use_tree_kernel:
+        from repro.kernels.ops import tree_dist_pairs
+
+        d = tree_dist_pairs(t.up, t.depth, qa.ravel(),
+                            jnp.broadcast_to(qb, (4, c, k)).ravel())
+        d = d.reshape(4, c, k)
+    elif euler is not None:
+        d = tree_distance_euler(euler, qa, qb)
+    else:
+        d = tree_distance(t, qa, qb)
+    return ((d[0] <= cols_b) & (d[1] <= cols_b)) | (
+        (d[2] <= cols_b) & (d[3] <= cols_b)
     )
 
 
@@ -174,6 +265,12 @@ class Phase1Result(NamedTuple):
     group_overflow: jax.Array  # (L,) bool — per dense group index
 
 
+def _empty_phase1() -> "Phase1Result":
+    """The L == 0 result (isolated-node graphs; see build_group_layout)."""
+    return Phase1Result(accept=jnp.zeros((0,), bool),
+                        group_overflow=jnp.zeros((0,), bool))
+
+
 @jax.jit
 def phase1_edge_views(
     perm: jax.Array,
@@ -214,6 +311,8 @@ def phase1_basic(
 ) -> Phase1Result:
     """Sequential greedy (basic LGRASS): one lax.scan over sorted slots."""
     m = su.shape[0]
+    if m == 0:
+        return _empty_phase1()
     acc_u = jnp.zeros((m, k_cap), jnp.int32)
     acc_v = jnp.zeros((m, k_cap), jnp.int32)
     acc_b = jnp.full((m, k_cap), -1, jnp.int32)
@@ -262,6 +361,8 @@ def phase1_parallel(
     steps = max group size; each step is O(G * K * log N) dense work.
     """
     m = su.shape[0]
+    if m == 0:
+        return _empty_phase1()
     garange = jnp.arange(m, dtype=jnp.int32)
     lane_live = garange < layout.n_groups
     # Trip count: longest *active* group only. Inactive slots (tree /
@@ -312,3 +413,148 @@ def phase1_parallel(
         cond, body, (jnp.int32(0), acc_u, acc_v, acc_b, cnt, ovf, out)
     )
     return Phase1Result(accept=out, group_overflow=ovf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_cap", "chunk", "use_tree_kernel"))
+def phase1_chunked(
+    t: LiftingTables,
+    su: jax.Array,
+    sv: jax.Array,
+    sbeta: jax.Array,
+    layout: GroupLayout,
+    k_cap: int = 32,
+    chunk: int = 32,
+    use_tree_kernel: bool = False,
+    euler: Optional[EulerLCA] = None,
+) -> Phase1Result:
+    """Two-level chunked greedy — the recovery-style replay for phase 1.
+
+    Sorted slots are processed in blocks of `chunk`. Per block, ONE
+    batched distance query answers every cover test the block can need:
+
+      * block vs buffer — each slot i against the (k_cap,) accepted
+        snapshot of *its own* group (slots only interact within a
+        group), gathered as (C, K) per-row candidate tables;
+      * block vs block — each slot i against every other block slot j,
+        masked to same-group strictly-earlier accepted entries.
+
+    The inner lax.scan then resolves the block's accept/reject chain
+    with pure arithmetic on (C,)/(K,) vectors: coverage is a row lookup,
+    the running per-group count is cnt-at-block-start plus a masked
+    popcount of the stored-so-far vector, overflow is a compare. All
+    table updates land in ONE batched scatter per block (distinct
+    (group, slot) targets, rejects parked on row L and dropped).
+
+    Crossing slots occupy a prefix of the sorted layout (non-crossing /
+    tree / padding slots share the (UMAX, UMAX) tail group, which sorts
+    last), so the outer while_loop runs ceil(n_crossing / chunk) blocks
+    — never the full L. Decisions are integer comparisons throughout,
+    hence bit-identical to `phase1_basic` / `phase1_parallel` / the
+    numpy oracle (tests/test_marking_chunked.py).
+
+    `euler`: optional Euler-tour O(1)-LCA tables (lca.py) backing the
+    distance queries — O(1) gathers per query instead of O(log n).
+    """
+    m = su.shape[0]
+    if m == 0:
+        return _empty_phase1()
+    c = max(min(chunk, m), 1)
+    act_all = layout.active
+    x_pad = block_view(jnp.where(act_all, su, 0).astype(jnp.int32), c, 0)
+    y_pad = block_view(jnp.where(act_all, sv, 0).astype(jnp.int32), c, 0)
+    b_pad = block_view(sbeta.astype(jnp.int32), c, -1)
+    g_pad = block_view(layout.gidx, c, 0)
+    act_pad = block_view(act_all, c, False)
+    n_blocks = g_pad.shape[0]
+    blocks_needed = (jnp.sum(act_all.astype(jnp.int32)) + c - 1) // c
+    kiota = jnp.arange(k_cap, dtype=jnp.int32)
+    ciota = jnp.arange(c, dtype=jnp.int32)
+
+    def inner(store_vec, xs):
+        cov_buf_i, pair_row, same_row, act_i, cnt0_i, i = xs
+        hit = store_vec & same_row           # stored same-group, earlier
+        cov = cov_buf_i | jnp.any(pair_row & hit)
+        accept = act_i & ~cov
+        cnt_here = cnt0_i + jnp.sum(hit.astype(jnp.int32))
+        full = cnt_here >= k_cap
+        store = accept & ~full
+        store_vec = store_vec | ((ciota == i) & store)
+        return store_vec, (accept, store, accept & full, cnt_here)
+
+    def cond(state):
+        return state[0] < blocks_needed
+
+    def body(state):
+        blk, acc_u, acc_v, acc_b, cnt, ovf, out = state
+        pick = lambda a: jax.lax.dynamic_index_in_dim(a, blk,
+                                                      keepdims=False)
+        g, act = pick(g_pad), pick(act_pad)
+        x, y, b = pick(x_pad), pick(y_pad), pick(b_pad)
+        cnt0 = cnt[g]
+        pair_buf = ball_pair_table(t, x, y, acc_u[g], acc_v[g], acc_b[g],
+                                   use_tree_kernel, euler)
+        cov_buf = jnp.any(pair_buf & (kiota[None, :] < cnt0[:, None]),
+                          axis=1)
+        pair_blk = ball_pair_table(t, x, y, x, y, b, use_tree_kernel,
+                                   euler)
+        same_prior = (g[:, None] == g[None, :]) & (
+            ciota[None, :] < ciota[:, None]
+        )
+        _, (accept, store, oflag, cnt_at) = jax.lax.scan(
+            inner, jnp.zeros((c,), bool),
+            (cov_buf, pair_blk, same_prior, act, cnt0, ciota),
+        )
+        park = jnp.where(store, g, m)
+        slot = jnp.minimum(cnt_at, k_cap - 1)
+        acc_u = acc_u.at[park, slot].set(x, mode="drop")
+        acc_v = acc_v.at[park, slot].set(y, mode="drop")
+        acc_b = acc_b.at[park, slot].set(b, mode="drop")
+        cnt = cnt.at[park].add(1, mode="drop")
+        ovf = ovf.at[jnp.where(oflag, g, m)].set(True, mode="drop")
+        out = jax.lax.dynamic_update_slice(out, accept, (blk * c,))
+        return blk + 1, acc_u, acc_v, acc_b, cnt, ovf, out
+
+    init = (
+        jnp.int32(0),
+        jnp.zeros((m, k_cap), jnp.int32),
+        jnp.zeros((m, k_cap), jnp.int32),
+        jnp.full((m, k_cap), -1, jnp.int32),  # -1 beta matches nothing
+        jnp.zeros((m,), jnp.int32),
+        jnp.zeros((m,), bool),
+        jnp.zeros((n_blocks * c,), bool),
+    )
+    _, _, _, _, _, ovf, out = jax.lax.while_loop(cond, body, init)
+    return Phase1Result(accept=out[:m], group_overflow=ovf)
+
+
+def run_phase1(
+    t: LiftingTables,
+    su: jax.Array,
+    sv: jax.Array,
+    sbeta: jax.Array,
+    layout: GroupLayout,
+    k_cap: int = 32,
+    schedule: str = "chunked",
+    parallel: bool = True,
+    chunk: Optional[int] = None,
+    use_tree_kernel: bool = False,
+    euler: Optional[EulerLCA] = None,
+) -> Phase1Result:
+    """Schedule dispatcher — the one entry every pipeline goes through.
+
+    schedule="chunked" (default) runs `phase1_chunked` with an automatic
+    pow2 block size (`core.pow2.auto_chunk`, ~sqrt(L)) unless `chunk`
+    pins one; schedule="scan" keeps the legacy per-slot engines, with
+    `parallel` picking rank-lockstep vs the basic sequential scan. All
+    choices are bit-identical; this is purely a performance knob.
+    """
+    if schedule == "chunked":
+        c = auto_chunk(int(su.shape[0])) if chunk is None else int(chunk)
+        return phase1_chunked(t, su, sv, sbeta, layout, k_cap=k_cap,
+                              chunk=c, use_tree_kernel=use_tree_kernel,
+                              euler=euler)
+    if schedule != "scan":
+        raise ValueError(f"unknown phase-1 schedule {schedule!r}")
+    fn = phase1_parallel if parallel else phase1_basic
+    return fn(t, su, sv, sbeta, layout, k_cap=k_cap)

@@ -26,3 +26,18 @@ def log2_ceil(n: int) -> int:
     while (1 << k) < n:
         k += 1
     return k
+
+
+def auto_chunk(m: int, lo: int = 8, hi: int = 64) -> int:
+    """Power-of-two block size ~ sqrt(m), clamped to [lo, hi].
+
+    The chunked schedulers (phase-1 marking, recovery replay) pay one
+    batched LCA per block of C slots plus a C-step arithmetic inner
+    scan, so per-block cost grows ~C^2 while the step count shrinks as
+    m/C; C ~ sqrt(m) balances the two, and the pow2 grid keeps the
+    number of distinct compiled shapes small across serving buckets.
+    """
+    c = lo
+    while c < hi and c * c < m:
+        c <<= 1
+    return c

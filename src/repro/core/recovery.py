@@ -28,6 +28,8 @@ Two implementations of the identical semantics live here:
     vectorised via binary-lifting tree distances (lca.py tables;
     `x in B(c, beta)` iff `tree_dist(x, c) <= beta`, so no ball is ever
     materialised), with one batched LCA per block of `chunk` edges
+    (marking.ball_pair_table, the cover-table helper shared with the
+    chunked phase-1 scheduler that later ported this exact scheme)
     answering every block-vs-buffer and block-vs-block query at once;
     and the after-effects dirty propagation is *lazy*: instead of the
     host's eager "dirty every edge this ball pair covers" BFS scatter,
@@ -47,7 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import _host as H
-from repro.core.lca import LiftingTables, tree_distance
+from repro.core.lca import LiftingTables
+from repro.core.marking import ball_pair_table
+from repro.core.sort import block_view
 
 
 def recover_host(
@@ -132,34 +136,6 @@ def recover_host(
 recover = recover_host
 
 
-def _pair_table(t: LiftingTables, xs, ys, cols_u, cols_v, cols_b,
-                use_tree_kernel):
-    """Ball-pair cover table for a block of edges vs a set of candidates.
-
-    xs, ys: (C,) block edge endpoints. cols_*: (K,) candidate accepted
-    edges (u, v, beta). Returns (C, K) bool — candidate j's ball pair
-    covers block edge i. The 4·C·K tree distances are one fused batched
-    LCA (or one Pallas tree-distance kernel call) — this is where the
-    chunking pays: the O(log n) climb's sequential latency is amortised
-    over the whole block instead of one edge.
-    """
-    c, k = xs.shape[0], cols_u.shape[0]
-    qa = jnp.broadcast_to(jnp.stack([xs, ys, xs, ys])[:, :, None],
-                          (4, c, k))
-    qb = jnp.broadcast_to(
-        jnp.stack([cols_u, cols_v, cols_v, cols_u])[:, None, :], (4, c, k)
-    )
-    if use_tree_kernel:
-        from repro.kernels.ops import tree_dist_pairs
-
-        d = tree_dist_pairs(t.up, t.depth, qa.ravel(), qb.ravel())
-        d = d.reshape(4, c, k)
-    else:
-        d = tree_distance(t, qa, qb)
-    b = cols_b[None, :]
-    return ((d[0] <= b) & (d[1] <= b)) | ((d[2] <= b) & (d[3] <= b))
-
-
 def _recover_scan(
     t: LiftingTables,
     u: jax.Array,
@@ -175,8 +151,14 @@ def _recover_scan(
     b_cap: int,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    euler=None,
 ):
     """The device replay: a chunked two-level lax.scan over rank slots.
+
+    `euler`: optional lca.EulerLCA tables — when given (the fused
+    program passes the ones it already built for chunked marking), the
+    per-block cover tables answer each distance in O(1) gathers instead
+    of O(log n) lifting climbs; decisions are identical integers.
 
     `order` is a full (L,) permutation — (crit desc, id asc) with tree /
     padding slots forced to -inf keys, so they trail every off-tree edge
@@ -212,15 +194,13 @@ def _recover_scan(
     Returns (accepted (L,) bool, n_accepted int32).
     """
     L = u.shape[0]
+    if L == 0:  # isolated-node graph: nothing to replay
+        return jnp.zeros((0,), bool), jnp.int32(0)
     budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(b_cap))
     c = max(min(chunk, L), 1)
     n_blocks = -(-L // c)
-    pad = n_blocks * c - L
-    order_pad = jnp.concatenate(
-        [order.astype(jnp.int32),
-         jnp.zeros((pad,), jnp.int32)]).reshape(n_blocks, c)
-    svalid_pad = jnp.concatenate(
-        [jnp.ones((L,), bool), jnp.zeros((pad,), bool)]).reshape(n_blocks, c)
+    order_pad = block_view(order.astype(jnp.int32), c, 0)
+    svalid_pad = block_view(jnp.ones((L,), bool), c, False)
     occ_iota = jnp.arange(b_cap, dtype=jnp.int32)
 
     def inner(carry, xs):
@@ -276,8 +256,8 @@ def _recover_scan(
         cols_u = jnp.concatenate([buf_u, bx])
         cols_v = jnp.concatenate([buf_v, by])
         cols_b = jnp.concatenate([buf_b, beta[eids].astype(jnp.int32)])
-        pair_tbl = _pair_table(t, bx, by, cols_u, cols_v, cols_b,
-                               use_tree_kernel)
+        pair_tbl = ball_pair_table(t, bx, by, cols_u, cols_v, cols_b,
+                                   use_tree_kernel, euler)
         (buf_u, buf_v, buf_b, buf_nc, _, cnt, gflag, out), _ = jax.lax.scan(
             inner,
             (buf_u, buf_v, buf_b, buf_nc,

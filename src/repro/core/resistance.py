@@ -100,3 +100,63 @@ def criticality(
 ) -> jax.Array:
     """Spectral criticality w(e) * R_T(e) — the greedy's sort key."""
     return w * edge_resistance(t, r, u, v, edge_lca)
+
+
+# ---------------------------------------------------------------------------
+# Dense ground truth (host / numpy, float64): the O(n^3) pseudoinverse
+# formulation the linear pipeline is validated against. Small-n only —
+# tests/test_spectral_quality.py uses these to pin the sparsifier's
+# *spectral* quality directly, so a refactor cannot silently degrade
+# output while staying self-consistent with its own oracle.
+# ---------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402  (host-only helpers below)
+
+
+def dense_laplacian_np(n, u, v, w, mask=None) -> np.ndarray:
+    """(n, n) float64 graph Laplacian of the (optionally masked) edges."""
+    L = np.zeros((n, n), np.float64)
+    if mask is None:
+        mask = np.ones(len(u), bool)
+    for x, y, ww, keep in zip(np.asarray(u), np.asarray(v),
+                              np.asarray(w, np.float64), np.asarray(mask)):
+        if not keep:
+            continue
+        x, y = int(x), int(y)
+        L[x, x] += ww
+        L[y, y] += ww
+        L[x, y] -= ww
+        L[y, x] -= ww
+    return L
+
+
+def dense_effective_resistance_np(L_dense: np.ndarray, u, v) -> np.ndarray:
+    """Effective resistances R(u_i, v_i) via the Laplacian pseudoinverse.
+
+    R(a, b) = (e_a - e_b)^T L^+ (e_a - e_b) — the textbook definition the
+    tree-path sums of `root_path_sums` + LCA reproduce exactly when the
+    graph *is* a tree (asserted by the quality tests).
+    """
+    P = np.linalg.pinv(L_dense, hermitian=True)
+    u = np.asarray(u)
+    v = np.asarray(v)
+    return P[u, u] + P[v, v] - 2.0 * P[u, v]
+
+
+def spectral_bounds_np(L_full: np.ndarray, L_sub: np.ndarray,
+                       tol: float = 1e-9):
+    """(lam_min, lam_max) of the pencil x^T L_sub x / x^T L_full x.
+
+    Restricted to range(L_full) (the all-ones null space — and any
+    disconnected-component null directions — are projected out): with
+    L_full = U diag(d) U^T, W = U_+ diag(d_+^{-1/2}), the pencil spectrum
+    is eig(W^T L_sub W). For a subgraph sparsifier 0 <= lam <= 1, and
+    lam_min is the quality figure: how much of every quadratic form the
+    sparsifier preserves.
+    """
+    d, U = np.linalg.eigh(L_full)
+    keep = d > tol * max(float(d[-1]), 1.0)
+    W = U[:, keep] / np.sqrt(d[keep])[None, :]
+    M = W.T @ L_sub @ W
+    lam = np.linalg.eigvalsh((M + M.T) / 2.0)
+    return float(lam[0]), float(lam[-1])

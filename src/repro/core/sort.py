@@ -72,10 +72,13 @@ def _digit_ranks_and_hist(digits: jax.Array, nb: int = _NBUCKETS,
     def step(carry, ck):
         onehot = ck[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]
         onehot_i = onehot.astype(jnp.int32)
-        # exclusive prefix within the chunk, per bucket
-        within = jnp.cumsum(onehot_i, axis=0) - onehot_i
-        rank = carry[ck] + jnp.sum(within * onehot_i, axis=1)
-        return carry + jnp.sum(onehot_i, axis=0), rank
+        # exclusive prefix within the chunk, per bucket (sum dtypes are
+        # pinned: under x64 numpy-style promotion would widen to int64
+        # and break the scan carry)
+        within = jnp.cumsum(onehot_i, axis=0, dtype=jnp.int32) - onehot_i
+        rank = carry[ck] + jnp.sum(within * onehot_i, axis=1,
+                                   dtype=jnp.int32)
+        return carry + jnp.sum(onehot_i, axis=0, dtype=jnp.int32), rank
 
     hist, ranks = jax.lax.scan(step, jnp.zeros((nb,), jnp.int32), chunks)
     return ranks.reshape(-1), hist
@@ -185,6 +188,24 @@ def sort_f32_desc_stable(keys: jax.Array,
         keys = jnp.where(valid, keys, -jnp.inf)
     k = float32_sort_key(keys)
     return radix_argsort_u32(~k)  # bitwise-not of a monotone map => desc
+
+
+def block_view(x: jax.Array, chunk: int, fill) -> jax.Array:
+    """Pad a (L,) array to a chunk multiple and reshape to (n_blocks, chunk).
+
+    The block-aligned layout both chunked schedulers (phase-1 marking and
+    the recovery replay) iterate over: block b holds sorted slots
+    [b*chunk, (b+1)*chunk), with the ragged tail padded by `fill` (pick a
+    value the consumer's masks neutralise — False for activity masks, 0
+    for ids). chunk must be >= 1; L == 0 yields (0, chunk).
+    """
+    m = x.shape[0]
+    n_blocks = -(-m // chunk)
+    pad = n_blocks * chunk - m
+    padded = jnp.concatenate(
+        [x, jnp.full((pad,), fill, dtype=x.dtype)]
+    )
+    return padded.reshape(n_blocks, chunk)
 
 
 @jax.jit

@@ -29,7 +29,12 @@ from repro.core import _host as H
 from repro.core.baseline import default_budget
 from repro.core.bfs import bfs, effective_weights, select_root
 from repro.core.graph import Graph
-from repro.core.lca import LiftingTables, build_lifting, lca_with_shortcut
+from repro.core.lca import (
+    LiftingTables,
+    build_euler,
+    build_lifting,
+    lca_with_shortcut,
+)
 from repro.core.marking import (
     GroupLayout,
     Phase1Result,
@@ -38,6 +43,7 @@ from repro.core.marking import (
     phase1_basic,
     phase1_edge_views,
     phase1_parallel,
+    run_phase1,
 )
 from repro.core.mst import boruvka_mst
 from repro.core.pow2 import log2_ceil, next_pow2
@@ -80,6 +86,10 @@ def _phase1_program(
     parallel: bool,
     lift_levels: int | None,
     edge_valid: jax.Array | None,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
+    use_tree_kernel: bool = False,
 ):
     """EFF→MST→LCA→RES→SORT→MARK(phase 1), optionally padding-masked.
 
@@ -89,6 +99,14 @@ def _phase1_program(
     group, and all real-slot outputs are bit-identical to an unpadded run
     of the same graph (binary-lifting depth only grows with n, and extra
     levels are provable no-ops for both LCA climbs and root-path sums).
+
+    schedule/p1_chunk select the MARK engine (marking.run_phase1):
+    "chunked" (default, block size p1_chunk or auto-pow2 ~sqrt(L)) or
+    "scan" (the legacy engines; `parallel` picks lockstep vs basic). All
+    schedules are bit-identical. use_euler_lca additionally builds the
+    Euler-tour O(1)-LCA tables once and backs the chunked cover tables
+    with them; use_tree_kernel routes those tables through the Pallas
+    tree-distance kernel instead.
     """
     root = select_root(u, v, n, edge_valid)
     depth_g, _ = bfs(u, v, n, root, edge_mask=edge_valid)
@@ -116,9 +134,17 @@ def _phase1_program(
     hi, lo, crossing = group_keys(t, root, u, v, elca, is_offtree)
     layout = build_group_layout(crit, hi, lo, crossing, edge_valid)
     su, sv, sbeta = u[layout.perm], v[layout.perm], beta[layout.perm]
-    fn = phase1_parallel if parallel else phase1_basic
-    p1 = fn(t, su, sv, sbeta, layout, k_cap=k_cap)
-    return dict(
+    euler = None
+    # the Pallas kernel path takes precedence inside ball_pair_table, so
+    # skip the (then-unused) Euler build when it is selected. Built for
+    # ANY schedule: the fused recovery replay consumes it too.
+    if use_euler_lca and not use_tree_kernel:
+        euler = build_euler(parent_t, depth_t, root, n)
+    p1 = run_phase1(t, su, sv, sbeta, layout, k_cap=k_cap,
+                    schedule=schedule, parallel=parallel, chunk=p1_chunk,
+                    use_tree_kernel=use_tree_kernel,
+                    euler=euler if schedule == "chunked" else None)
+    d = dict(
         tree_mask=tree_mask,
         parent_t=parent_t,
         depth_t=depth_t,
@@ -132,10 +158,13 @@ def _phase1_program(
         group_overflow=p1.group_overflow,
         n_groups=layout.n_groups,
     )
+    return d, euler
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels",
+                                    "schedule", "p1_chunk", "use_euler_lca",
+                                    "use_tree_kernel"))
 def phase1_device(
     u: jax.Array,
     v: jax.Array,
@@ -144,17 +173,26 @@ def phase1_device(
     k_cap: int = 32,
     parallel: bool = True,
     lift_levels: int | None = None,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
+    use_tree_kernel: bool = False,
 ):
     """The phase-1 device program: EFF→MST→LCA→RES→SORT→MARK.
 
     Returns everything the host recovery tail needs. This function is the
     unit the multi-pod dry-run lowers and compiles.
     """
-    return _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, None)
+    d, _ = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, None,
+                           schedule, p1_chunk, use_euler_lca,
+                           use_tree_kernel)
+    return d
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "k_cap", "parallel", "lift_levels"))
+                   static_argnames=("n", "k_cap", "parallel", "lift_levels",
+                                    "schedule", "p1_chunk", "use_euler_lca",
+                                    "use_tree_kernel"))
 def phase1_device_batched(
     u: jax.Array,
     v: jax.Array,
@@ -164,6 +202,10 @@ def phase1_device_batched(
     k_cap: int = 32,
     parallel: bool = True,
     lift_levels: int | None = None,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
+    use_tree_kernel: bool = False,
 ):
     """`phase1_device` vmapped over a leading batch axis.
 
@@ -173,8 +215,9 @@ def phase1_device_batched(
     """
     return jax.vmap(
         lambda bu, bv, bw, bev: _phase1_program(
-            bu, bv, bw, n, k_cap, parallel, lift_levels, bev
-        )
+            bu, bv, bw, n, k_cap, parallel, lift_levels, bev,
+            schedule, p1_chunk, use_euler_lca, use_tree_kernel
+        )[0]
     )(u, v, w, edge_valid)
 
 
@@ -191,6 +234,9 @@ def _lgrass_program(
     edge_valid: jax.Array | None,
     use_tree_kernel: bool,
     chunk: int = 32,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
 ):
     """Phase 1 + device recovery fused into one program (Fig. 1b end-to-end).
 
@@ -200,7 +246,9 @@ def _lgrass_program(
     host round-trip anywhere. Only scalars and the final masks leave the
     device.
     """
-    d = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, edge_valid)
+    d, euler = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels,
+                               edge_valid, schedule, p1_chunk,
+                               use_euler_lca, use_tree_kernel)
     t = LiftingTables(up=d["up"], depth=d["depth_t"])
     tree_mask = d["tree_mask"]
     crossing = d["crossing"]
@@ -214,7 +262,7 @@ def _lgrass_program(
     accepted, n_accepted = _recover_scan(
         t, u, v, d["beta"], offtree, crossing, order, accept_by_edge,
         group_of_edge, dirty0, jnp.asarray(budget, jnp.int32), b_cap,
-        use_tree_kernel, chunk,
+        use_tree_kernel, chunk, euler,
     )
     depth_fin = jnp.where(
         d["depth_t"] == jnp.iinfo(jnp.int32).max, 0, d["depth_t"]
@@ -232,7 +280,8 @@ def _lgrass_program(
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
-                                    "b_cap", "use_tree_kernel", "chunk"))
+                                    "b_cap", "use_tree_kernel", "chunk",
+                                    "schedule", "p1_chunk", "use_euler_lca"))
 def lgrass_device(
     u: jax.Array,
     v: jax.Array,
@@ -245,6 +294,9 @@ def lgrass_device(
     b_cap: int = B_CAP_FLOOR,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
 ):
     """The full device program: phase 1 fused with the recovery replay.
 
@@ -253,12 +305,14 @@ def lgrass_device(
     stats only — the first point data leaves the device.
     """
     return _lgrass_program(u, v, w, budget, n, k_cap, parallel,
-                           lift_levels, b_cap, None, use_tree_kernel, chunk)
+                           lift_levels, b_cap, None, use_tree_kernel, chunk,
+                           schedule, p1_chunk, use_euler_lca)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
-                                    "b_cap", "use_tree_kernel", "chunk"))
+                                    "b_cap", "use_tree_kernel", "chunk",
+                                    "schedule", "p1_chunk", "use_euler_lca"))
 def lgrass_device_batched(
     u: jax.Array,
     v: jax.Array,
@@ -272,6 +326,9 @@ def lgrass_device_batched(
     b_cap: int = B_CAP_FLOOR,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    schedule: str = "chunked",
+    p1_chunk: int | None = None,
+    use_euler_lca: bool = True,
 ):
     """`lgrass_device` vmapped over a padded batch: ONE dispatch runs
     phase 1 *and* recovery for every graph — no host round-trip between
@@ -279,7 +336,7 @@ def lgrass_device_batched(
     return jax.vmap(
         lambda bu, bv, bw, bev, bb: _lgrass_program(
             bu, bv, bw, bb, n, k_cap, parallel, lift_levels, b_cap, bev,
-            use_tree_kernel, chunk,
+            use_tree_kernel, chunk, schedule, p1_chunk, use_euler_lca,
         )
     )(u, v, w, edge_valid, budget)
 
@@ -310,6 +367,9 @@ def lgrass_sparsify(
     b_cap: Optional[int] = None,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    schedule: str = "chunked",
+    p1_chunk: Optional[int] = None,
+    use_euler_lca: bool = True,
 ) -> SparsifyResult:
     """Run LGRASS on a host graph; returns the sparsifier edge mask.
 
@@ -317,6 +377,14 @@ def lgrass_sparsify(
     one dispatch end-to-end; "host" runs phase 1 on device and replays
     Algorithm 6 with the numpy oracle (`recover_host`). Both are
     bit-identical (tests/test_recovery_device.py).
+
+    schedule/p1_chunk: the phase-1 marking engine — "chunked" (default;
+    block size p1_chunk, or an auto pow2 ~sqrt(L)) or "scan" (legacy
+    per-slot engines, `parallel` picking lockstep vs basic). All
+    schedules are bit-identical (tests/test_marking_chunked.py);
+    use_euler_lca (default on) backs the chunked cover tables with the
+    Euler-tour O(1) LCA built once per graph — measured faster than the
+    lifting climbs at every size on CPU, including the build.
 
     auto_lift_bound: measure the tree depth first (one extra BFS) and
     build depth-bounded lifting tables — identical output, ~log(N)/log(D)
@@ -353,23 +421,28 @@ def lgrass_sparsify(
             raise ValueError(f"b_cap {b_cap} < budget {budget}")
         d = jax.device_get(lgrass_device(
             u, v, w, jnp.int32(budget), n, k_cap, parallel, lift_levels,
-            b_cap, use_tree_kernel, chunk))
+            b_cap, use_tree_kernel, chunk, schedule, p1_chunk,
+            use_euler_lca))
         if lift_levels is not None:
             if int(d["tree_depth_max"]) >= (1 << lift_levels):
                 d = jax.device_get(lgrass_device(
                     u, v, w, jnp.int32(budget), n, k_cap, parallel, None,
-                    b_cap, use_tree_kernel, chunk))
+                    b_cap, use_tree_kernel, chunk, schedule, p1_chunk,
+                    use_euler_lca))
         return _result_from_device(d, None, L)
     if recovery != "host":
         raise ValueError(f"unknown recovery mode {recovery!r}")
 
     d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
-                                     lift_levels))
+                                     lift_levels, schedule, p1_chunk,
+                                     use_euler_lca, use_tree_kernel))
     if lift_levels is not None:
         tree_dmax = int(d["depth_t"].max())
         if tree_dmax >= (1 << lift_levels):  # bound violated: redo safely
             d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
-                                             None))
+                                             None, schedule, p1_chunk,
+                                             use_euler_lca,
+                                             use_tree_kernel))
     return _recovery_tail(g, d, budget)
 
 
@@ -455,6 +528,9 @@ def lgrass_sparsify_batch(
     b_cap: Optional[int] = None,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    schedule: str = "chunked",
+    p1_chunk: Optional[int] = None,
+    use_euler_lca: bool = True,
 ) -> list:
     """Run LGRASS on many graphs with ONE device compile + dispatch.
 
@@ -500,6 +576,9 @@ def lgrass_sparsify_batch(
             b_cap,
             use_tree_kernel,
             chunk,
+            schedule,
+            p1_chunk,
+            use_euler_lca,
         ))
         return [_result_from_device(d, i, g.m)
                 for i, g in enumerate(batch.graphs)]
@@ -515,6 +594,10 @@ def lgrass_sparsify_batch(
         k_cap,
         parallel,
         None,
+        schedule,
+        p1_chunk,
+        use_euler_lca,
+        use_tree_kernel,
     ))
     results = []
     for i, (g, b) in enumerate(zip(batch.graphs, budgets)):

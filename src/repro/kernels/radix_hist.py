@@ -38,13 +38,15 @@ def _hist_kernel(d_ref, rank_ref, hist_ref, carry_ref, *, n_chunks: int):
     c = d.shape[0]
     buckets = jax.lax.broadcasted_iota(jnp.int32, (c, NB), 1)
     onehot = (d[:, None] == buckets).astype(jnp.int32)      # (C, NB)
-    within = jnp.cumsum(onehot, axis=0) - onehot            # exclusive
+    # sum/cumsum dtypes pinned: x64 promotion would widen to int64 and
+    # the stores into the int32 refs fail
+    within = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - onehot
     carry = carry_ref[...]                                  # (NB,)
     # rank = carry[digit] + row prefix, both as dense contractions
-    rank = (jnp.sum(onehot * carry[None, :], axis=1) +
-            jnp.sum(within * onehot, axis=1))
+    rank = (jnp.sum(onehot * carry[None, :], axis=1, dtype=jnp.int32) +
+            jnp.sum(within * onehot, axis=1, dtype=jnp.int32))
     rank_ref[...] = rank
-    carry_ref[...] = carry + jnp.sum(onehot, axis=0)
+    carry_ref[...] = carry + jnp.sum(onehot, axis=0, dtype=jnp.int32)
 
     @pl.when(i == n_chunks - 1)
     def _flush():

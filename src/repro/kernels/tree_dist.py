@@ -26,10 +26,14 @@ from repro import compat
 
 
 def _gather(row: jax.Array, idx: jax.Array, n: int) -> jax.Array:
-    """row: (n,) int32; idx: (C,) int32 -> row[idx] via one-hot contraction."""
+    """row: (n,) int32; idx: (C,) int32 -> row[idx] via one-hot contraction.
+
+    The sum dtype is pinned: under x64 numpy-style promotion would widen
+    the contraction to int64 and the store into the int32 out ref fails.
+    """
     cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
     onehot = (idx[:, None] == cols).astype(jnp.int32)
-    return jnp.sum(onehot * row[None, :], axis=1)
+    return jnp.sum(onehot * row[None, :], axis=1, dtype=jnp.int32)
 
 
 def _tree_dist_kernel(up_ref, depth_ref, a_ref, b_ref, out_ref, *,

@@ -22,6 +22,12 @@ This module adds the traffic-facing policy:
     with trivial placeholder graphs (dropped from the results); chunk
     sizes 5, 7, 12 share the B=8/8/16 programs instead of compiling
     three times.
+  * **schedule policy** — the phase-1 marking engine is a per-service
+    config (`schedule="chunked"` by default) and its block size is
+    resolved *per bucket* from the padded edge count
+    (`core.pow2.auto_chunk`), so every graph in a bucket shares one
+    compiled block size and `warmup` compiles exactly the programs
+    traffic will request.
   * **warmup** — `warmup(sizes)` pre-compiles the bucket programs for
     anticipated request shapes off the request path; compile counts and
     wall-clock are surfaced in `ServiceStats`.
@@ -40,7 +46,7 @@ import numpy as np
 
 from repro.core.baseline import default_budget
 from repro.core.graph import Graph, GraphBatch
-from repro.core.pow2 import next_pow2
+from repro.core.pow2 import auto_chunk, next_pow2
 from repro.core.sparsify import (
     SparsifyResult,
     _bucket_b_cap,
@@ -90,6 +96,8 @@ class SparsifyService:
         min_n_bucket: int = 16,
         min_L_bucket: int = 32,
         recovery: str = "device",
+        schedule: str = "chunked",
+        p1_chunk: Optional[int] = None,
     ):
         self.k_cap = k_cap
         self.parallel = parallel
@@ -97,7 +105,24 @@ class SparsifyService:
         self.min_n_bucket = min_n_bucket
         self.min_L_bucket = min_L_bucket
         self.recovery = recovery
+        self.schedule = schedule
+        self.p1_chunk = p1_chunk
         self.stats = ServiceStats()
+
+    def _p1_chunk(self, L_bucket: int) -> Optional[int]:
+        """Per-bucket phase-1 block size policy.
+
+        The scheduler's auto policy (`core.pow2.auto_chunk`) is a
+        function of the *padded* edge count, so it is resolved here from
+        the bucket — every graph in a bucket shares one compiled block
+        size, and `warmup` compiles exactly the program traffic will
+        request. An explicit `p1_chunk` pins all buckets instead.
+        """
+        if self.schedule != "chunked":
+            return None
+        if self.p1_chunk is not None:
+            return self.p1_chunk
+        return auto_chunk(L_bucket)
 
     def _bucket(self, n: int, L: int) -> Tuple[int, int]:
         """The bucketing policy, from raw sizes — the single source both
@@ -176,6 +201,8 @@ class SparsifyService:
                     k_cap=self.k_cap, parallel=self.parallel,
                     recovery=self.recovery,
                     b_cap=self._b_cap(n_bucket, resolved),
+                    schedule=self.schedule,
+                    p1_chunk=self._p1_chunk(L_bucket),
                 )
                 for i, r in zip(chunk, out):  # placeholder tail dropped
                     results[i] = r
@@ -222,6 +249,8 @@ class SparsifyService:
                     batch, budget=None, k_cap=self.k_cap,
                     parallel=self.parallel, recovery=self.recovery,
                     b_cap=b_cap,
+                    schedule=self.schedule,
+                    p1_chunk=self._p1_chunk(L_bucket),
                 )
                 n_dispatched += 1
         self.stats.n_warmup_dispatches += n_dispatched

@@ -1,0 +1,181 @@
+"""BFS engines: level-synchronous vs hop-doubling / Euler rooting.
+
+The two traversal passes (graph BFS for effective weights, tree BFS for
+the lifting tables) were the measured next bottleneck after phase-1
+chunking: O(diameter) tiny while_loop rounds, ~58% of batched phase-1
+on feeder-chain inputs whose diameter is O(n). This bench isolates both
+passes on the feeder family at full size (n >= 4k) and then re-runs the
+bench_recovery end-to-end comparison under each engine, so the
+before/after of the default flip is recorded in one place.
+
+  * graph pass — `bfs_levels` vs `bfs_doubling` (Bellman–Ford
+    relaxations + pointer doubling, O(log n) rounds on chains);
+  * tree pass — `bfs_levels` restricted to the spanning tree vs
+    `root_tree` (Euler-tour rooting via list ranking — no BFS at all);
+  * e2e — `lgrass_sparsify_batch` host-tail vs fused device path on the
+    full-size feeder batch, once with bfs_engine="levels" (the old
+    default) and once with "doubling" (the new one).
+
+All engines are bit-identical (asserted here before timing, and in
+tests/test_bfs_doubling.py); this file only measures.
+
+    PYTHONPATH=src python benchmarks/bench_bfs.py [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lgrass_sparsify_batch
+from repro.core.bfs import (bfs_doubling, bfs_levels, effective_weights,
+                            root_tree, select_root)
+from repro.core.graph import GraphBatch, feeder_like_graph
+from repro.core.mst import boruvka_mst
+from repro.core.sort import sort_f32_desc_stable
+
+BATCH = 8
+
+
+def _time(fn, reps):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _mixed_graphs(quick):
+    """The bench_recovery full-size feeder batch (same generator)."""
+    base = 96 if quick else 256
+    step = 16 if quick else 64
+    return [
+        feeder_like_graph(base + step * i, base + step * i,
+                          span=16 + 4 * (i % 3), seed=500 + i)
+        for i in range(BATCH)
+    ]
+
+
+def run(quick: bool = False):
+    reps = 2 if quick else 5
+    rows = []
+
+    # --- isolated passes: feeder chain, n >= 4k (512 for smoke) -------
+    n = 512 if quick else 4096
+    g = feeder_like_graph(n, n, span=24, seed=42)
+    u = jnp.asarray(g.u, jnp.int32)
+    v = jnp.asarray(g.v, jnp.int32)
+    w = jnp.asarray(g.w, jnp.float32)
+    root = select_root(u, v, g.n)
+
+    # the pipeline's actual spanning tree for the tree-restricted pass
+    depth_g, _ = bfs_levels(u, v, g.n, root)
+    eff = effective_weights(u, v, w, depth_g, g.n)
+    perm = sort_f32_desc_stable(eff)
+    rank = jnp.zeros_like(perm).at[perm].set(
+        jnp.arange(g.m, dtype=jnp.int32))
+    tree_mask = boruvka_mst(u, v, rank, g.n)
+    jax.block_until_ready(tree_mask)
+
+    def graph_levels():
+        return jax.block_until_ready(bfs_levels(u, v, g.n, root))
+
+    def graph_doubling():
+        return jax.block_until_ready(bfs_doubling(u, v, g.n, root))
+
+    def tree_levels():
+        return jax.block_until_ready(
+            bfs_levels(u, v, g.n, root, tree_mask))
+
+    def tree_euler():
+        return jax.block_until_ready(root_tree(u, v, g.n, root, tree_mask))
+
+    # warm + bit-identity before any timing
+    dl, pl = graph_levels()
+    dd, pd = graph_doubling()
+    assert np.array_equal(np.asarray(dl), np.asarray(dd))
+    assert np.array_equal(np.asarray(pl), np.asarray(pd))
+    tl_d, tl_p = tree_levels()
+    te_d, te_p = tree_euler()
+    assert np.array_equal(np.asarray(tl_d), np.asarray(te_d))
+    assert np.array_equal(np.asarray(tl_p), np.asarray(te_p))
+
+    t_gl = _time(graph_levels, reps)
+    t_gd = _time(graph_doubling, reps)
+    t_tl = _time(tree_levels, reps)
+    t_te = _time(tree_euler, reps)
+    diam = int(np.asarray(dl)[np.asarray(dl) < np.iinfo(np.int32).max].max())
+    rows += [
+        (f"bfs.graph_n{n}.levels_us", t_gl * 1e6, f"depth={diam}"),
+        (f"bfs.graph_n{n}.doubling_us", t_gd * 1e6, ""),
+        (f"bfs.graph_n{n}.speedup", 0.0, round(t_gl / t_gd, 2)),
+        (f"bfs.tree_n{n}.levels_us", t_tl * 1e6,
+         f"tree_depth={int(np.asarray(tl_d).max())}"),
+        (f"bfs.tree_n{n}.euler_us", t_te * 1e6, "root_tree"),
+        (f"bfs.tree_n{n}.speedup", 0.0, round(t_tl / t_te, 2)),
+        (f"bfs.stage_n{n}.speedup", 0.0,
+         round((t_gl + t_tl) / (t_gd + t_te), 2)),
+    ]
+
+    # --- e2e before/after: the bench_recovery comparison per engine ---
+    def e2e_rows(tag, batch, e2e_reps):
+        out = []
+        for engine in ("levels", "doubling"):
+            def e2e_host():
+                return lgrass_sparsify_batch(batch, parallel=False,
+                                             recovery="host",
+                                             bfs_engine=engine)
+
+            def e2e_device():
+                return lgrass_sparsify_batch(batch, parallel=False,
+                                             recovery="device",
+                                             bfs_engine=engine)
+
+            for a, b in zip(e2e_host(), e2e_device()):  # warm + equiv.
+                assert np.array_equal(a.edge_mask, b.edge_mask)
+            t_h = _time(e2e_host, e2e_reps)
+            t_d = _time(e2e_device, e2e_reps)
+            out += [
+                (f"bfs.{tag}.{engine}.host_tail_us", t_h * 1e6, ""),
+                (f"bfs.{tag}.{engine}.device_us", t_d * 1e6,
+                 "1 dispatch"),
+                (f"bfs.{tag}.{engine}.speedup", 0.0, round(t_h / t_d, 2)),
+            ]
+        return out
+
+    rows += e2e_rows("e2e_feeder", GraphBatch.from_graphs(
+        _mixed_graphs(quick)), reps)
+    if not quick:
+        # the diameter-bound regime the engine targets: feeder chains
+        # at n >= 2k, where the levels engine pays O(n) rounds
+        # 4 reps: the box's rep-to-rep spread at these sizes is large
+        # enough that min-of-2 can invert the comparison
+        big = [feeder_like_graph(2048 + 128 * i, 2048 + 128 * i,
+                                 span=16 + 4 * (i % 3), seed=700 + i)
+               for i in range(4)]
+        rows += e2e_rows("e2e_bigfeeder", GraphBatch.from_graphs(big), 4)
+    return rows
+
+
+def _derived(rows, name):
+    return [r[2] for r in rows if r[0] == name][0]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps (CI smoke job)")
+    args = ap.parse_args()
+    rows = run(quick=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    n = 512 if args.smoke else 4096
+    stage = _derived(rows, f"bfs.stage_n{n}.speedup")
+    before = _derived(rows, "bfs.e2e_feeder.levels.speedup")
+    after = _derived(rows, "bfs.e2e_feeder.doubling.speedup")
+    print(f"isolated BFS stage: {stage}x; e2e feeder host-vs-device: "
+          f"{before}x (levels) -> {after}x (doubling) "
+          f"({'WIN' if stage > 1 and after >= before else 'MIXED'})")

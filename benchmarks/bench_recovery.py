@@ -31,9 +31,12 @@ Since the phase-1 chunking PR the e2e rows compare two paths that both
 run the chunked+Euler marking schedule, and the fused device path
 additionally backs its recovery cover tables with the same Euler
 tables — that flip is what moved e2e past parity (~1.33x at smoke
-sizes). At the full sizes the comparison re-approaches parity (~1.1x)
-because feeder chains make the two level-synchronous BFS passes the
-dominant shared cost (diameter ~n; see the ROADMAP item).
+sizes). The full-size rows were then BFS-bound (diameter ~n feeder
+chains pinned the ratio at ~1.0-1.1x) until the hop-doubling engine
+(benchmarks/bench_bfs.py) collapsed the two traversal passes; both
+paths share that win, so the absolute e2e dropped ~2.7x while the
+host-vs-device ratio moved to the ~1.2x the remaining shared stages
+(MST, marking) allow — bench_bfs records the engine before/after.
 
     PYTHONPATH=src python benchmarks/bench_recovery.py [--smoke]
 """

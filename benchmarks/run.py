@@ -35,6 +35,7 @@ def _bench_config(quick: bool):
             "use_euler_lca": True,
             "recovery_chunk": 32,
             "k_cap": 32,
+            "bfs_engine": "doubling",
         },
     }
 
@@ -45,15 +46,16 @@ def main() -> None:
                     help="small sizes (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table2,fig5,kernels,roofline,"
-                         "batch,recovery,phase1")
+                         "batch,recovery,phase1,bfs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + config as JSON "
                          "(e.g. BENCH_pr4.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_kernels, bench_phase1,
-                            bench_recovery, fig5_linearity, roofline,
-                            table2_breakdown, table3_execution_time)
+    from benchmarks import (bench_batch, bench_bfs, bench_kernels,
+                            bench_phase1, bench_recovery, fig5_linearity,
+                            roofline, table2_breakdown,
+                            table3_execution_time)
 
     suites = {
         "table3": table3_execution_time.run,
@@ -64,6 +66,7 @@ def main() -> None:
         "batch": bench_batch.run,
         "recovery": bench_recovery.run,
         "phase1": bench_phase1.run,
+        "bfs": bench_bfs.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     all_rows = []

@@ -51,7 +51,9 @@ def select_root_np(u, v, n) -> int:
 
 
 def effective_weights_np(u, v, w, depth) -> np.ndarray:
-    d = depth.astype(np.float32)
+    # mirror of bfs.finite_depth: unreachable depths clamp to 0 so a
+    # disconnected input cannot poison the weights with float32(2^31-1)
+    d = np.where(depth == INF_I32, 0, depth).astype(np.float32)
     return (w.astype(np.float32) * (d[u] + d[v] + np.float32(1.0))).astype(
         np.float32
     )

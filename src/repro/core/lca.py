@@ -146,6 +146,34 @@ class EulerLCA(NamedTuple):
     depth: jax.Array  # (n,) int32 — node depths (distance arithmetic)
 
 
+def tables_from_tour(tour: jax.Array, T: jax.Array, depth: jax.Array,
+                     n: int) -> EulerLCA:
+    """EulerLCA tables from an already-materialised tour.
+
+    `tour` is the (P = 2n-1,) node sequence with positions 0..T real
+    (T = tour length - 1); any valid Euler tour of the (sub)tree works —
+    the range minimum between two first occurrences is the unique LCA
+    node regardless of child visit order. Shared by `build_euler` and
+    `bfs.root_tree_euler`, so there is exactly ONE definition of the
+    table layout `lca_euler` queries.
+    """
+    P = 2 * n - 1
+    INF = jnp.iinfo(jnp.int32).max
+    piota = jnp.arange(P, dtype=jnp.int32)
+    real = piota <= T  # positions 0..T hold the tour (length T + 1)
+    dseq = jnp.where(real, depth[tour], INF)
+    first = jnp.full((n,), P - 1, jnp.int32).at[
+        jnp.where(real, tour, n)].min(piota, mode="drop")
+    tabs = [piota]
+    for k in range(1, _log2_ceil(P) + 1 if P > 1 else 1):
+        h = 1 << (k - 1)
+        prev = tabs[-1]
+        other = prev[jnp.minimum(piota + h, P - 1)]
+        tabs.append(jnp.where(dseq[other] < dseq[prev], other, prev))
+    return EulerLCA(tour=tour, dseq=dseq, first=first,
+                    table=jnp.stack(tabs), depth=depth)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def build_euler(parent: jax.Array, depth: jax.Array, root: jax.Array,
                 n: int) -> EulerLCA:
@@ -212,26 +240,14 @@ def build_euler(parent: jax.Array, depth: jax.Array, root: jax.Array,
     T = jnp.where(first_child[root] >= 0, d[start] + 1, 0)  # tour arcs
     pos = T - 1 - d  # pos[start] == 0; invalid arcs masked below
 
-    # -- 3. node sequence, depth sequence, first occurrences ------------
+    # -- 3. node sequence -----------------------------------------------
     heads = jnp.concatenate([nodes, jnp.maximum(parent, 0)])
     wpos = jnp.where(arc_valid, pos + 1, P)
     tour = (jnp.zeros((P,), jnp.int32).at[0].set(root)
             .at[wpos].set(heads, mode="drop"))
-    piota = jnp.arange(P, dtype=jnp.int32)
-    real = piota <= T  # positions 0..T hold the tour (length T + 1)
-    dseq = jnp.where(real, depth[tour], INF)
-    first = jnp.full((n,), P - 1, jnp.int32).at[
-        jnp.where(real, tour, n)].min(piota, mode="drop")
 
-    # -- 4. sparse table of range-depth-min positions -------------------
-    tabs = [piota]
-    for k in range(1, _log2_ceil(P) + 1 if P > 1 else 1):
-        h = 1 << (k - 1)
-        prev = tabs[-1]
-        other = prev[jnp.minimum(piota + h, P - 1)]
-        tabs.append(jnp.where(dseq[other] < dseq[prev], other, prev))
-    return EulerLCA(tour=tour, dseq=dseq, first=first,
-                    table=jnp.stack(tabs), depth=depth)
+    # -- 4. depth sequence, first occurrences, sparse RMQ table ---------
+    return tables_from_tour(tour, T, depth, n)
 
 
 @jax.jit

@@ -108,8 +108,12 @@ def group_keys(
     crossing = is_offtree & (edge_lca != u) & (edge_lca != v)
     is_child = t.depth == 1
     child_rank = jnp.cumsum(is_child.astype(jnp.int32)) - 1
-    s_u = child_rank[subroot(t, u)]
-    s_v = child_rank[subroot(t, v)]
+    # ONE subroot climb over the n nodes, then two gathers per edge —
+    # climbing (L,)-shaped endpoint arrays repeats every ancestor gather
+    # ~2L/n times for nothing
+    sub_all = subroot(t, jnp.arange(n, dtype=jnp.int32))
+    s_u = child_rank[sub_all[u]]
+    s_v = child_rank[sub_all[v]]
     s1 = jnp.maximum(s_u, s_v).astype(jnp.uint32)
     s2 = jnp.minimum(s_u, s_v).astype(jnp.uint32)
     at_root = edge_lca == root

@@ -25,9 +25,12 @@ Two implementations of the identical semantics live here:
   * `recover_device` — a jit/vmap-able chunked `lax.scan` over the
     criticality-ordered edge stream. The accepted set lives in a
     budget-bounded (b_cap,) buffer; the ball-pair coverage test is
-    vectorised via binary-lifting tree distances (lca.py tables;
-    `x in B(c, beta)` iff `tree_dist(x, c) <= beta`, so no ball is ever
-    materialised), with one batched LCA per block of `chunk` edges
+    vectorised via analytic tree distances (`x in B(c, beta)` iff
+    `tree_dist(x, c) <= beta`, so no ball is ever materialised) —
+    answered by Euler-tour O(1)-LCA tables rebuilt on device from
+    up[0] by default (`use_euler_lca`, the same backend the fused
+    program shares), or by binary-lifting climbs — with one batched
+    LCA per block of `chunk` edges
     (marking.ball_pair_table, the cover-table helper shared with the
     chunked phase-1 scheduler that later ported this exact scheme)
     answering every block-vs-buffer and block-vs-block query at once;
@@ -49,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import _host as H
-from repro.core.lca import LiftingTables
+from repro.core.lca import LiftingTables, build_euler
 from repro.core.marking import ball_pair_table
 from repro.core.sort import block_view
 
@@ -280,8 +283,27 @@ def _recover_scan(
     return out, cnt
 
 
+def _euler_from_lifting(up: jax.Array, depth_t: jax.Array):
+    """Rebuild the Euler-tour O(1)-LCA tables from lifting-table inputs.
+
+    The standalone recovery entries only receive `up`/`depth_t`, so the
+    tree shape the fused program already had is reconstructed on device:
+    `parent` is up[0] with its self-loops (root, unreachable padding)
+    mapped back to -1, and the root is the unique depth-0 node
+    (`argmin` — padding carries INF depth, so the real root always
+    wins). One `build_euler` then gives the exact tables the fused
+    pipeline shares with its replay; vmap-safe (pure gathers/scatters).
+    """
+    n = up.shape[-1]
+    nodes = jnp.arange(n, dtype=jnp.int32)
+    parent = jnp.where(up[0] == nodes, -1, up[0])
+    root = jnp.argmin(depth_t).astype(jnp.int32)
+    return build_euler(parent, depth_t, root, n)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("b_cap", "use_tree_kernel", "chunk"))
+                   static_argnames=("b_cap", "use_tree_kernel", "chunk",
+                                    "use_euler_lca"))
 def recover_device(
     up: jax.Array,
     depth_t: jax.Array,
@@ -299,24 +321,36 @@ def recover_device(
     edge_valid: jax.Array | None = None,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    use_euler_lca: bool = True,
 ):
     """Standalone jitted recovery tail (the unit bench_recovery.py times).
 
     Same argument conventions as `recover_host` except the order is the
     full (L,) sort permutation and `budget` is a device scalar. Returns
     (accepted (L,) bool, n_accepted int32 scalar).
+
+    use_euler_lca (default on) reconstructs the tree from `up[0]` and
+    builds the Euler-tour O(1)-LCA tables on device, so the cover
+    tables stop climbing the lifting tables — the same backend the
+    fused `lgrass_device` replay uses (decisions are identical
+    integers; parity vs `recover_host` in tests/test_recovery_device.py).
+    The Pallas kernel path takes precedence, as everywhere else.
     """
     t = LiftingTables(up=up, depth=depth_t)
+    euler = None
+    if use_euler_lca and not use_tree_kernel:
+        euler = _euler_from_lifting(up, depth_t)
     offtree = ~tree_mask if edge_valid is None else (~tree_mask) & edge_valid
     return _recover_scan(
         t, u, v, beta, offtree, crossing, order, phase1_accept,
         group_of_edge, dirty0, jnp.asarray(budget, jnp.int32), b_cap,
-        use_tree_kernel, chunk,
+        use_tree_kernel, chunk, euler,
     )
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("b_cap", "use_tree_kernel", "chunk"))
+                   static_argnames=("b_cap", "use_tree_kernel", "chunk",
+                                    "use_euler_lca"))
 def recover_device_batched(
     up: jax.Array,
     depth_t: jax.Array,
@@ -334,6 +368,7 @@ def recover_device_batched(
     edge_valid: jax.Array | None = None,
     use_tree_kernel: bool = False,
     chunk: int = 32,
+    use_euler_lca: bool = True,
 ):
     """`recover_device` vmapped over a leading batch axis.
 
@@ -341,13 +376,19 @@ def recover_device_batched(
     One dispatch replays every graph's recovery — the standalone unit
     for pipelines that keep phase-1 outputs device-resident, and the one
     bench_recovery.py times against the sync + per-graph host loop.
+    Each lane rebuilds its own Euler tables from `up[0]` (see
+    `recover_device`); the build is plain gathers/scatters, so the whole
+    reconstruction vmaps into the one dispatch.
     """
     def one(bup, bdep, bu, bv, bbeta, btree, bcross, border, bacc, bgrp,
             bdirty, bb, bev):
         t = LiftingTables(up=bup, depth=bdep)
+        euler = None
+        if use_euler_lca and not use_tree_kernel:
+            euler = _euler_from_lifting(bup, bdep)
         return _recover_scan(
             t, bu, bv, bbeta, (~btree) & bev, bcross, border, bacc, bgrp,
-            bdirty, bb, b_cap, use_tree_kernel, chunk,
+            bdirty, bb, b_cap, use_tree_kernel, chunk, euler,
         )
 
     if edge_valid is None:  # all-true mask ≡ the unmasked offtree

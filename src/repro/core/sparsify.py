@@ -27,12 +27,19 @@ import numpy as np
 
 from repro.core import _host as H
 from repro.core.baseline import default_budget
-from repro.core.bfs import bfs, effective_weights, select_root
+from repro.core.bfs import (
+    bfs,
+    effective_weights,
+    finite_depth,
+    root_tree_euler,
+    select_root,
+)
 from repro.core.graph import Graph
 from repro.core.lca import (
     LiftingTables,
     build_euler,
     build_lifting,
+    lca_euler,
     lca_with_shortcut,
 )
 from repro.core.marking import (
@@ -90,6 +97,7 @@ def _phase1_program(
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
     use_tree_kernel: bool = False,
+    bfs_engine: str = "doubling",
 ):
     """EFF→MST→LCA→RES→SORT→MARK(phase 1), optionally padding-masked.
 
@@ -107,9 +115,24 @@ def _phase1_program(
     Euler-tour O(1)-LCA tables once and backs the chunked cover tables
     with them; use_tree_kernel routes those tables through the Pallas
     tree-distance kernel instead.
+
+    bfs_engine picks the two traversal passes' implementation
+    (bfs.py): "doubling" (default) runs the graph pass as the
+    O(log n)-round hop-doubling engine and replaces the tree pass with
+    the Euler-tour rooting (`root_tree_euler` — no BFS at all);
+    "levels" keeps both passes level-synchronous. On the pipeline's
+    legal inputs (connected graphs, graph.py's contract) outputs are
+    bit-identical and this is purely a performance knob
+    (tests/test_bfs_doubling.py; diameter-bound feeder chains are
+    where "doubling" wins). The BFS engines themselves agree on ANY
+    input including disconnected forests, but downstream LCA values
+    for *unreachable* endpoints are backend-dependent garbage under
+    every backend, so full-pipeline parity is only promised where the
+    pipeline is defined.
     """
     root = select_root(u, v, n, edge_valid)
-    depth_g, _ = bfs(u, v, n, root, edge_mask=edge_valid)
+    depth_g, _ = bfs(u, v, n, root, edge_mask=edge_valid,
+                     engine=bfs_engine)
     eff = effective_weights(u, v, w, depth_g, n)
 
     perm_eff = sort_f32_desc_stable(eff, valid=edge_valid)
@@ -120,9 +143,31 @@ def _phase1_program(
     )
     tree_mask = boruvka_mst(u, v, rank_eff, n, edge_valid)
 
-    depth_t, parent_t = bfs(u, v, n, root, edge_mask=tree_mask)
+    # the Pallas kernel path takes precedence inside ball_pair_table, so
+    # skip the (then-unused) Euler build when it is selected. Built for
+    # ANY schedule: the fused recovery replay consumes it too.
+    want_euler = use_euler_lca and not use_tree_kernel
+    euler = None
+    if bfs_engine == "doubling":
+        # exact O(log n) tree rooting via the Euler tour — the tree's
+        # depth/parent are unique, so no fixpoint iteration is needed;
+        # the rooted tour doubles as the O(1)-LCA tables (no second
+        # tour construction via build_euler)
+        depth_t, parent_t, euler = root_tree_euler(
+            u, v, n, root, tree_mask, with_euler=want_euler)
+    else:
+        depth_t, parent_t = bfs(u, v, n, root, edge_mask=tree_mask,
+                                engine=bfs_engine)
+        if want_euler:
+            euler = build_euler(parent_t, depth_t, root, n)
     t = build_lifting(parent_t, depth_t, n, levels=lift_levels)
-    elca = lca_with_shortcut(t, root, u, v)
+    if euler is not None:
+        # O(1) gathers per edge instead of L-wide lifting climbs; the
+        # LCA of two reachable nodes is backend-independent, so every
+        # downstream value is bit-identical
+        elca = lca_euler(euler, u, v)
+    else:
+        elca = lca_with_shortcut(t, root, u, v)
     inv_w = node_parent_inv_w(u, v, w, tree_mask, parent_t, n)
     r = root_path_sums(t, inv_w)
     crit = criticality(t, r, u, v, w, elca)
@@ -134,12 +179,6 @@ def _phase1_program(
     hi, lo, crossing = group_keys(t, root, u, v, elca, is_offtree)
     layout = build_group_layout(crit, hi, lo, crossing, edge_valid)
     su, sv, sbeta = u[layout.perm], v[layout.perm], beta[layout.perm]
-    euler = None
-    # the Pallas kernel path takes precedence inside ball_pair_table, so
-    # skip the (then-unused) Euler build when it is selected. Built for
-    # ANY schedule: the fused recovery replay consumes it too.
-    if use_euler_lca and not use_tree_kernel:
-        euler = build_euler(parent_t, depth_t, root, n)
     p1 = run_phase1(t, su, sv, sbeta, layout, k_cap=k_cap,
                     schedule=schedule, parallel=parallel, chunk=p1_chunk,
                     use_tree_kernel=use_tree_kernel,
@@ -164,7 +203,7 @@ def _phase1_program(
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
                                     "schedule", "p1_chunk", "use_euler_lca",
-                                    "use_tree_kernel"))
+                                    "use_tree_kernel", "bfs_engine"))
 def phase1_device(
     u: jax.Array,
     v: jax.Array,
@@ -177,6 +216,7 @@ def phase1_device(
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
     use_tree_kernel: bool = False,
+    bfs_engine: str = "doubling",
 ):
     """The phase-1 device program: EFF→MST→LCA→RES→SORT→MARK.
 
@@ -185,14 +225,14 @@ def phase1_device(
     """
     d, _ = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels, None,
                            schedule, p1_chunk, use_euler_lca,
-                           use_tree_kernel)
+                           use_tree_kernel, bfs_engine)
     return d
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
                                     "schedule", "p1_chunk", "use_euler_lca",
-                                    "use_tree_kernel"))
+                                    "use_tree_kernel", "bfs_engine"))
 def phase1_device_batched(
     u: jax.Array,
     v: jax.Array,
@@ -206,6 +246,7 @@ def phase1_device_batched(
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
     use_tree_kernel: bool = False,
+    bfs_engine: str = "doubling",
 ):
     """`phase1_device` vmapped over a leading batch axis.
 
@@ -216,7 +257,8 @@ def phase1_device_batched(
     return jax.vmap(
         lambda bu, bv, bw, bev: _phase1_program(
             bu, bv, bw, n, k_cap, parallel, lift_levels, bev,
-            schedule, p1_chunk, use_euler_lca, use_tree_kernel
+            schedule, p1_chunk, use_euler_lca, use_tree_kernel,
+            bfs_engine
         )[0]
     )(u, v, w, edge_valid)
 
@@ -237,6 +279,7 @@ def _lgrass_program(
     schedule: str = "chunked",
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
+    bfs_engine: str = "doubling",
 ):
     """Phase 1 + device recovery fused into one program (Fig. 1b end-to-end).
 
@@ -248,7 +291,7 @@ def _lgrass_program(
     """
     d, euler = _phase1_program(u, v, w, n, k_cap, parallel, lift_levels,
                                edge_valid, schedule, p1_chunk,
-                               use_euler_lca, use_tree_kernel)
+                               use_euler_lca, use_tree_kernel, bfs_engine)
     t = LiftingTables(up=d["up"], depth=d["depth_t"])
     tree_mask = d["tree_mask"]
     crossing = d["crossing"]
@@ -264,9 +307,7 @@ def _lgrass_program(
         group_of_edge, dirty0, jnp.asarray(budget, jnp.int32), b_cap,
         use_tree_kernel, chunk, euler,
     )
-    depth_fin = jnp.where(
-        d["depth_t"] == jnp.iinfo(jnp.int32).max, 0, d["depth_t"]
-    )
+    depth_fin = finite_depth(d["depth_t"])
     return dict(
         tree_mask=tree_mask,
         accepted=accepted,
@@ -281,7 +322,8 @@ def _lgrass_program(
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
                                     "b_cap", "use_tree_kernel", "chunk",
-                                    "schedule", "p1_chunk", "use_euler_lca"))
+                                    "schedule", "p1_chunk", "use_euler_lca",
+                                    "bfs_engine"))
 def lgrass_device(
     u: jax.Array,
     v: jax.Array,
@@ -297,6 +339,7 @@ def lgrass_device(
     schedule: str = "chunked",
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
+    bfs_engine: str = "doubling",
 ):
     """The full device program: phase 1 fused with the recovery replay.
 
@@ -306,13 +349,14 @@ def lgrass_device(
     """
     return _lgrass_program(u, v, w, budget, n, k_cap, parallel,
                            lift_levels, b_cap, None, use_tree_kernel, chunk,
-                           schedule, p1_chunk, use_euler_lca)
+                           schedule, p1_chunk, use_euler_lca, bfs_engine)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "k_cap", "parallel", "lift_levels",
                                     "b_cap", "use_tree_kernel", "chunk",
-                                    "schedule", "p1_chunk", "use_euler_lca"))
+                                    "schedule", "p1_chunk", "use_euler_lca",
+                                    "bfs_engine"))
 def lgrass_device_batched(
     u: jax.Array,
     v: jax.Array,
@@ -329,6 +373,7 @@ def lgrass_device_batched(
     schedule: str = "chunked",
     p1_chunk: int | None = None,
     use_euler_lca: bool = True,
+    bfs_engine: str = "doubling",
 ):
     """`lgrass_device` vmapped over a padded batch: ONE dispatch runs
     phase 1 *and* recovery for every graph — no host round-trip between
@@ -337,6 +382,7 @@ def lgrass_device_batched(
         lambda bu, bv, bw, bev, bb: _lgrass_program(
             bu, bv, bw, bb, n, k_cap, parallel, lift_levels, b_cap, bev,
             use_tree_kernel, chunk, schedule, p1_chunk, use_euler_lca,
+            bfs_engine,
         )
     )(u, v, w, edge_valid, budget)
 
@@ -370,6 +416,7 @@ def lgrass_sparsify(
     schedule: str = "chunked",
     p1_chunk: Optional[int] = None,
     use_euler_lca: bool = True,
+    bfs_engine: str = "doubling",
 ) -> SparsifyResult:
     """Run LGRASS on a host graph; returns the sparsifier edge mask.
 
@@ -385,6 +432,13 @@ def lgrass_sparsify(
     use_euler_lca (default on) backs the chunked cover tables with the
     Euler-tour O(1) LCA built once per graph — measured faster than the
     lifting climbs at every size on CPU, including the build.
+
+    bfs_engine: the traversal engine for both BFS passes — "doubling"
+    (default: hop-doubling graph BFS + Euler-tour tree rooting,
+    O(log n) rounds on chain-like inputs) or "levels" (the legacy
+    level-synchronous passes). Bit-identical outputs
+    (tests/test_bfs_doubling.py); benchmarks/bench_bfs.py measures the
+    difference on the diameter-bound feeder family.
 
     auto_lift_bound: measure the tree depth first (one extra BFS) and
     build depth-bounded lifting tables — identical output, ~log(N)/log(D)
@@ -406,9 +460,10 @@ def lgrass_sparsify(
         # estimate from graph BFS depth ×4 (tree paths stretch); the
         # post-hoc check below guarantees correctness regardless.
         root = select_root(u, v, n)
-        depth_g, _ = bfs(u, v, n, root)
-        dmax = int(jax.device_get(jnp.max(jnp.where(
-            depth_g == jnp.iinfo(jnp.int32).max, 0, depth_g))))
+        depth_g, _ = bfs(u, v, n, root, engine=bfs_engine)
+        # finite_depth: unreachable (INF) depths must not inflate the
+        # estimate — the shared bfs.py guard, not an ad-hoc mask
+        dmax = int(jax.device_get(jnp.max(finite_depth(depth_g))))
         safe = 1
         while (1 << safe) <= 4 * max(dmax, 1):
             safe += 1
@@ -422,27 +477,28 @@ def lgrass_sparsify(
         d = jax.device_get(lgrass_device(
             u, v, w, jnp.int32(budget), n, k_cap, parallel, lift_levels,
             b_cap, use_tree_kernel, chunk, schedule, p1_chunk,
-            use_euler_lca))
+            use_euler_lca, bfs_engine))
         if lift_levels is not None:
             if int(d["tree_depth_max"]) >= (1 << lift_levels):
                 d = jax.device_get(lgrass_device(
                     u, v, w, jnp.int32(budget), n, k_cap, parallel, None,
                     b_cap, use_tree_kernel, chunk, schedule, p1_chunk,
-                    use_euler_lca))
+                    use_euler_lca, bfs_engine))
         return _result_from_device(d, None, L)
     if recovery != "host":
         raise ValueError(f"unknown recovery mode {recovery!r}")
 
     d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
                                      lift_levels, schedule, p1_chunk,
-                                     use_euler_lca, use_tree_kernel))
+                                     use_euler_lca, use_tree_kernel,
+                                     bfs_engine))
     if lift_levels is not None:
         tree_dmax = int(d["depth_t"].max())
         if tree_dmax >= (1 << lift_levels):  # bound violated: redo safely
             d = jax.device_get(phase1_device(u, v, w, n, k_cap, parallel,
                                              None, schedule, p1_chunk,
                                              use_euler_lca,
-                                             use_tree_kernel))
+                                             use_tree_kernel, bfs_engine))
     return _recovery_tail(g, d, budget)
 
 
@@ -531,6 +587,7 @@ def lgrass_sparsify_batch(
     schedule: str = "chunked",
     p1_chunk: Optional[int] = None,
     use_euler_lca: bool = True,
+    bfs_engine: str = "doubling",
 ) -> list:
     """Run LGRASS on many graphs with ONE device compile + dispatch.
 
@@ -579,6 +636,7 @@ def lgrass_sparsify_batch(
             schedule,
             p1_chunk,
             use_euler_lca,
+            bfs_engine,
         ))
         return [_result_from_device(d, i, g.m)
                 for i, g in enumerate(batch.graphs)]
@@ -598,6 +656,7 @@ def lgrass_sparsify_batch(
         p1_chunk,
         use_euler_lca,
         use_tree_kernel,
+        bfs_engine,
     ))
     results = []
     for i, (g, b) in enumerate(zip(batch.graphs, budgets)):

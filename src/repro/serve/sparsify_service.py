@@ -28,6 +28,11 @@ This module adds the traffic-facing policy:
     (`core.pow2.auto_chunk`), so every graph in a bucket shares one
     compiled block size and `warmup` compiles exactly the programs
     traffic will request.
+  * **BFS-engine policy** — the traversal engine (`bfs_engine=
+    "doubling"` by default: hop-doubling graph BFS + Euler-tour tree
+    rooting, O(log n) rounds on diameter-bound inputs) is a compiled-
+    program key like the block size, resolved per bucket through one
+    hook (`_bfs_engine`) that both the request path and `warmup` use.
   * **warmup** — `warmup(sizes)` pre-compiles the bucket programs for
     anticipated request shapes off the request path; compile counts and
     wall-clock are surfaced in `ServiceStats`.
@@ -98,6 +103,7 @@ class SparsifyService:
         recovery: str = "device",
         schedule: str = "chunked",
         p1_chunk: Optional[int] = None,
+        bfs_engine: str = "doubling",
     ):
         self.k_cap = k_cap
         self.parallel = parallel
@@ -107,6 +113,7 @@ class SparsifyService:
         self.recovery = recovery
         self.schedule = schedule
         self.p1_chunk = p1_chunk
+        self.bfs_engine = bfs_engine
         self.stats = ServiceStats()
 
     def _p1_chunk(self, L_bucket: int) -> Optional[int]:
@@ -123,6 +130,20 @@ class SparsifyService:
         if self.p1_chunk is not None:
             return self.p1_chunk
         return auto_chunk(L_bucket)
+
+    def _bfs_engine(self, n_bucket: int) -> str:
+        """Per-bucket BFS-engine policy.
+
+        The engine is a compiled-program key, so — exactly like the
+        phase-1 block size — it is resolved through this one hook from
+        the bucket, and `warmup` resolves through the same hook: warmed
+        programs are the ones traffic requests. The default policy is
+        uniform ("doubling" everywhere: it is never more loop rounds
+        than level-sync and collapses diameter-bound buckets to
+        O(log n)); subclasses with measured per-size preferences can
+        override on `n_bucket`.
+        """
+        return self.bfs_engine
 
     def _bucket(self, n: int, L: int) -> Tuple[int, int]:
         """The bucketing policy, from raw sizes — the single source both
@@ -203,6 +224,7 @@ class SparsifyService:
                     b_cap=self._b_cap(n_bucket, resolved),
                     schedule=self.schedule,
                     p1_chunk=self._p1_chunk(L_bucket),
+                    bfs_engine=self._bfs_engine(n_bucket),
                 )
                 for i, r in zip(chunk, out):  # placeholder tail dropped
                     results[i] = r
@@ -251,6 +273,7 @@ class SparsifyService:
                     b_cap=b_cap,
                     schedule=self.schedule,
                     p1_chunk=self._p1_chunk(L_bucket),
+                    bfs_engine=self._bfs_engine(n_bucket),
                 )
                 n_dispatched += 1
         self.stats.n_warmup_dispatches += n_dispatched

@@ -15,10 +15,12 @@ import jax.numpy as jnp
 
 from _prop import cases, integers, sampled_from
 from repro.core import (baseline_sparsify, lgrass_sparsify,
-                        lgrass_sparsify_batch, recover_device)
-from repro.core.graph import (feeder_like_graph, powergrid_like_graph,
-                              random_connected_graph)
-from repro.core.sparsify import phase1_device, phase1_views_np
+                        lgrass_sparsify_batch, recover_device,
+                        recover_device_batched)
+from repro.core.graph import (GraphBatch, feeder_like_graph,
+                              powergrid_like_graph, random_connected_graph)
+from repro.core.sparsify import (phase1_device, phase1_device_batched,
+                                 phase1_views_np)
 
 
 def _assert_triple(g, budget, **kw):
@@ -110,7 +112,9 @@ def test_device_recovery_batched_matches_host_tail():
 
 def test_recover_device_standalone_from_phase1():
     """Drive `recover_device` directly from phase-1 outputs (the unit
-    bench_recovery.py times) and compare against the host oracle."""
+    bench_recovery.py times) and compare against the host oracle — on
+    both distance backends: the default Euler path (tables rebuilt on
+    device from up[0]) and the legacy lifting climbs."""
     g = random_connected_graph(36, 80, seed=7)
     budget = 7
     u = jnp.asarray(g.u, jnp.int32)
@@ -122,15 +126,72 @@ def test_recover_device_standalone_from_phase1():
         d, g.m)
     want = lgrass_sparsify(g, budget=budget, recovery="host").accepted_mask
 
-    got, n_acc = recover_device(
-        jnp.asarray(d["up"]), jnp.asarray(d["depth_t"]), u, v,
-        jnp.asarray(d["beta"]), jnp.asarray(tree), jnp.asarray(crossing),
-        jnp.asarray(full_order.astype(np.int32)), jnp.asarray(accept),
-        jnp.asarray(group.astype(np.int32)), jnp.asarray(dirty0),
-        jnp.int32(budget), b_cap=8,
-    )
-    assert np.array_equal(np.asarray(got), want)
-    assert int(n_acc) == int(want.sum())
+    for use_euler in (True, False):
+        got, n_acc = recover_device(
+            jnp.asarray(d["up"]), jnp.asarray(d["depth_t"]), u, v,
+            jnp.asarray(d["beta"]), jnp.asarray(tree),
+            jnp.asarray(crossing),
+            jnp.asarray(full_order.astype(np.int32)), jnp.asarray(accept),
+            jnp.asarray(group.astype(np.int32)), jnp.asarray(dirty0),
+            jnp.int32(budget), b_cap=8, use_euler_lca=use_euler,
+        )
+        assert np.array_equal(np.asarray(got), want), use_euler
+        assert int(n_acc) == int(want.sum())
+
+
+def test_recover_device_batched_standalone_euler_parity():
+    """`recover_device_batched` driven from batched phase-1 outputs:
+    each lane rebuilds its own Euler tables from up[0] (the ROADMAP
+    'standalone recovery still climbs the lifting tables' fix) and must
+    agree with the per-graph host oracle on every lane — padded shapes
+    and all — and with the lifting backend bit for bit."""
+    graphs = [
+        feeder_like_graph(80, 40, span=6, seed=11),
+        random_connected_graph(45, 110, seed=12, weight="ties"),
+        powergrid_like_graph(6, 0.4, seed=13),
+    ]
+    batch = GraphBatch.from_graphs(graphs)
+    budgets = [6, 9, 5]
+    d = {k: np.asarray(val) for k, val in phase1_device_batched(
+        jnp.asarray(batch.u, jnp.int32), jnp.asarray(batch.v, jnp.int32),
+        jnp.asarray(batch.w, jnp.float32),
+        jnp.asarray(batch.edge_valid), batch.n_max).items()}
+    L_pad = batch.L_max
+    tree = np.zeros((len(graphs), L_pad), bool)
+    crossing = np.zeros((len(graphs), L_pad), bool)
+    accept = np.zeros((len(graphs), L_pad), bool)
+    group = np.full((len(graphs), L_pad), -1, np.int32)
+    dirty0 = np.zeros((len(graphs), L_pad), bool)
+    order = np.zeros((len(graphs), L_pad), np.int32)
+    for i in range(len(graphs)):
+        di = {k: val[i] for k, val in d.items()}
+        # phase1_views_np over the PADDED length: the padded tail sorts
+        # after every real slot, exactly what the device glue sees
+        t_, c_, a_, g_, dd_, o_ = phase1_views_np(di, L_pad)
+        tree[i], crossing[i], accept[i] = t_, c_, a_
+        group[i], dirty0[i], order[i] = g_, dd_, o_.astype(np.int32)
+
+    outs = {}
+    for use_euler in (True, False):
+        got, cnt = recover_device_batched(
+            jnp.asarray(d["up"]), jnp.asarray(d["depth_t"]),
+            jnp.asarray(batch.u, jnp.int32),
+            jnp.asarray(batch.v, jnp.int32),
+            jnp.asarray(d["beta"]), jnp.asarray(tree),
+            jnp.asarray(crossing), jnp.asarray(order),
+            jnp.asarray(accept), jnp.asarray(group), jnp.asarray(dirty0),
+            jnp.asarray(np.asarray(budgets, np.int32)), b_cap=16,
+            edge_valid=jnp.asarray(batch.edge_valid),
+            use_euler_lca=use_euler,
+        )
+        outs[use_euler] = (np.asarray(got), np.asarray(cnt))
+    assert np.array_equal(outs[True][0], outs[False][0])
+    assert np.array_equal(outs[True][1], outs[False][1])
+    for i, (g, b) in enumerate(zip(graphs, budgets)):
+        want = lgrass_sparsify(g, budget=b, recovery="host").accepted_mask
+        assert np.array_equal(outs[True][0][i][: g.m], want), i
+        assert int(outs[True][1][i]) == int(want.sum())
+        assert not outs[True][0][i][g.m:].any()  # padding never accepted
 
 
 def test_feeder_like_graph_clamps_unreachable_chords():

@@ -46,15 +46,15 @@ def main() -> None:
                     help="small sizes (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table2,fig5,kernels,roofline,"
-                         "batch,recovery,phase1,bfs")
+                         "batch,recovery,phase1,bfs,service")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + config as JSON "
                          "(e.g. BENCH_pr4.json)")
     args = ap.parse_args()
 
     from benchmarks import (bench_batch, bench_bfs, bench_kernels,
-                            bench_phase1, bench_recovery, fig5_linearity,
-                            roofline, table2_breakdown,
+                            bench_phase1, bench_recovery, bench_service,
+                            fig5_linearity, roofline, table2_breakdown,
                             table3_execution_time)
 
     suites = {
@@ -67,6 +67,7 @@ def main() -> None:
         "recovery": bench_recovery.run,
         "phase1": bench_phase1.run,
         "bfs": bench_bfs.run,
+        "service": bench_service.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     all_rows = []

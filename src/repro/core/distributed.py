@@ -34,6 +34,37 @@ from repro.core.lca import LiftingTables, lca
 from repro.core.marking import _ball_pair_covered
 
 
+def batch_mesh(n_devices: int | None = None, axis: str = "batch") -> Mesh:
+    """A 1-axis mesh over the local devices for batch-axis sharding.
+
+    `lgrass_device_batched` is embarrassingly parallel over its leading
+    (graph) axis, so the serving plane shards that axis across this mesh
+    (`SparsifyService(mesh=...)`). On CPU CI the multi-device path is
+    exercised with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    (the bayespec/olmax trick from the related-repo snippets).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n > len(devs):
+        raise ValueError(f"batch_mesh({n}) but only {len(devs)} devices")
+    return compat.make_mesh((n,), (axis,))
+
+
+def mesh_size(mesh: Mesh) -> int:
+    """Total device count of `mesh` (the batch axis is sharded over ALL
+    of its axes, so multi-axis meshes flatten into one factor)."""
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+def shard_batch_leading(arrays, mesh: Mesh):
+    """device_put each array with its leading axis sharded across every
+    axis of `mesh` (remaining dims replicated). The leading dim must be
+    divisible by `mesh_size(mesh)` — the service pads the batch axis to
+    guarantee that."""
+    sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    return tuple(jax.device_put(a, sh) for a in arrays)
+
+
 @dataclasses.dataclass
 class ShardedGroupPlan:
     """Host-side plan mapping sorted slots onto shards (padded, contiguous)."""

@@ -96,6 +96,21 @@ PAD_ENDPOINT = 0     # padding edges are self loops on node 0
 PAD_WEIGHT = 0.0     # sentinel: real weights are strictly positive
 
 
+def trivial_graph() -> Graph:
+    """The minimal legal graph: one node, zero edges.
+
+    Two jobs: (a) the canonical degenerate input — the pipeline returns
+    empty masks for it through every path (direct, batched, service);
+    (b) the serving plane's batch-axis placeholder. A placeholder must
+    fit EVERY bucket, including (n_bucket=1, L_bucket=1) when the
+    service floors are lowered, so it has to be the smallest graph there
+    is — an (n=2, m=1) filler used to crash small buckets with
+    "bucket too small" (see tests/test_service_plane.py).
+    """
+    return Graph(n=1, u=np.zeros(0, np.int32), v=np.zeros(0, np.int32),
+                 w=np.zeros(0, np.float32))
+
+
 @dataclasses.dataclass
 class GraphBatch:
     """B graphs padded to shared (n_max, L_max) for one device dispatch.

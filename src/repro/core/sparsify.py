@@ -352,12 +352,7 @@ def lgrass_device(
                            schedule, p1_chunk, use_euler_lca, bfs_engine)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n", "k_cap", "parallel", "lift_levels",
-                                    "b_cap", "use_tree_kernel", "chunk",
-                                    "schedule", "p1_chunk", "use_euler_lca",
-                                    "bfs_engine"))
-def lgrass_device_batched(
+def _lgrass_batched_impl(
     u: jax.Array,
     v: jax.Array,
     w: jax.Array,
@@ -375,9 +370,6 @@ def lgrass_device_batched(
     use_euler_lca: bool = True,
     bfs_engine: str = "doubling",
 ):
-    """`lgrass_device` vmapped over a padded batch: ONE dispatch runs
-    phase 1 *and* recovery for every graph — no host round-trip between
-    phases. `budget` is a (B,) int32 vector (per-graph budgets)."""
     return jax.vmap(
         lambda bu, bv, bw, bev, bb: _lgrass_program(
             bu, bv, bw, bb, n, k_cap, parallel, lift_levels, b_cap, bev,
@@ -385,6 +377,30 @@ def lgrass_device_batched(
             bfs_engine,
         )
     )(u, v, w, edge_valid, budget)
+
+
+_BATCHED_STATICS = ("n", "k_cap", "parallel", "lift_levels", "b_cap",
+                    "use_tree_kernel", "chunk", "schedule", "p1_chunk",
+                    "use_euler_lca", "bfs_engine")
+
+lgrass_device_batched = jax.jit(
+    _lgrass_batched_impl, static_argnames=_BATCHED_STATICS)
+lgrass_device_batched.__doc__ = (
+    """`lgrass_device` vmapped over a padded batch: ONE dispatch runs
+    phase 1 *and* recovery for every graph — no host round-trip between
+    phases. `budget` is a (B,) int32 vector (per-graph budgets)."""
+)
+
+# The serving plane's steady-state variant: the padded edge arrays and
+# the budget vector are donated, so XLA reuses their device buffers for
+# the outputs instead of allocating fresh ones every request. Callers
+# must hand over arrays they will never touch again (the service builds
+# them fresh from its host staging pool each chunk; see
+# serve/sparsify_service.py). Same program, bit-identical outputs —
+# donation only changes buffer lifetime.
+lgrass_device_batched_donated = jax.jit(
+    _lgrass_batched_impl, static_argnames=_BATCHED_STATICS,
+    donate_argnums=(0, 1, 2, 3, 4))
 
 
 def _result_from_device(d: dict, i: Optional[int], L: int) -> SparsifyResult:

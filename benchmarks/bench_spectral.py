@@ -1,0 +1,134 @@
+"""Solver-free ER estimator: cost scaling and quality-vs-budget.
+
+The estimator (`core/spectral_probe.py`) is k spmv rounds over P probe
+vectors — O(k·P·m) flops, no factorisation, no dense anything — so its
+cost must scale near-linearly in edges and linearly in probes. This
+bench records both axes plus the knob the quality tiers actually buy
+with them:
+
+  * cost vs n   — fixed (P, k), random graphs with m = 2n edges at
+    geometrically growing n; `derived` carries edges/µs and the
+    step-to-step time ratio vs the size ratio (1.0 = perfectly linear);
+  * cost vs P   — fixed n, probes swept geometrically; spmv work is
+    shared across probes inside one dispatch, so growth should track P;
+  * quality vs budget — at a dense-oracle-reachable size (n = 512),
+    Spearman rank correlation of the estimated criticality ordering
+    against the float64 pinv, per probe budget: the curve that justifies
+    the P chosen by tests/test_spectral_probe.py (variance ~ sqrt(2/P));
+  * sparsifier budget curve — at the largest swept n, the solver-free
+    trace-similarity score of LGRASS sparsifiers across chord budgets,
+    normalised by the full graph's score: the quality-vs-budget curve
+    of tests/test_spectral_quality_scale.py, recorded as numbers.
+
+    PYTHONPATH=src python benchmarks/bench_spectral.py [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import random_connected_graph
+from repro.core.resistance import probe_calibration_np
+from repro.core.sparsify import lgrass_sparsify, phase1_device
+from repro.core.spectral_probe import (probe_edge_resistance,
+                                       trace_similarity)
+
+N_ITERS = 32
+N_PROBES = 16
+
+
+def _time(fn, reps):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(quick: bool = False):
+    reps = 2 if quick else 4
+    rows = []
+
+    # --- cost vs n: m = 2n, P and k fixed -----------------------------
+    sizes = [2_000, 8_000, 32_000] if quick else [10_000, 40_000, 160_000]
+    t_prev = None
+    for i, n in enumerate(sizes):
+        g = random_connected_graph(n, n, seed=100 + i)
+
+        def est():
+            return jax.block_until_ready(probe_edge_resistance(
+                g.u, g.v, g.w, g.n, n_probes=N_PROBES, n_iters=N_ITERS,
+                seed=1))
+
+        r = est()  # warm (compile per shape)
+        assert np.isfinite(np.asarray(r)).all()
+        t = _time(est, reps)
+        ratio = ""
+        if t_prev is not None:
+            # time ratio per size ratio: 1.0 == perfectly linear
+            ratio = f" step_ratio={t / t_prev / (n / n_prev):.2f}"
+        rows.append((f"spectral.er_n{n}_p{N_PROBES}_k{N_ITERS}.us",
+                     t * 1e6, f"edges_per_us={g.m / (t * 1e6):.1f}{ratio}"))
+        t_prev, n_prev = t, n
+
+    # --- cost vs probes: n fixed --------------------------------------
+    n = sizes[1]
+    g = random_connected_graph(n, n, seed=200)
+    probe_sweep = [8, 32, 128]
+    t8 = None
+    for p in probe_sweep:
+        def est_p():
+            return jax.block_until_ready(probe_edge_resistance(
+                g.u, g.v, g.w, g.n, n_probes=p, n_iters=N_ITERS, seed=1))
+
+        est_p()
+        t = _time(est_p, reps)
+        t8 = t if t8 is None else t8
+        rows.append((f"spectral.er_n{n}_probes{p}.us", t * 1e6,
+                     f"vs_p{probe_sweep[0]}={t / t8:.2f}x"))
+
+    # --- quality vs probe budget (dense-oracle size) ------------------
+    gq = random_connected_graph(512, 1024, seed=300)
+    d = jax.device_get(phase1_device(
+        jnp.asarray(gq.u, jnp.int32), jnp.asarray(gq.v, jnp.int32),
+        jnp.asarray(gq.w, jnp.float32), gq.n))
+    off = ~d["tree_mask"].astype(bool)
+    for p in ([16, 64] if quick else [16, 64, 256]):
+        r_hat = np.asarray(probe_edge_resistance(
+            gq.u, gq.v, gq.w, gq.n, n_probes=p, n_iters=64, seed=2))
+        cal = probe_calibration_np(
+            gq.n, gq.u, gq.v, gq.w, gq.u[off], gq.v[off], gq.w[off],
+            r_hat[off])
+        rows.append((f"spectral.quality_n512.p{p}", 0.0,
+                     f"spearman_crit={cal['spearman_crit']:.3f} "
+                     f"med_rel_err={cal['med_rel_err']:.3f}"))
+
+    # --- sparsifier quality vs chord budget (solver-free score) -------
+    gs = random_connected_graph(sizes[-1], sizes[-1], seed=400)
+    r_hat = jnp.asarray(probe_edge_resistance(
+        gs.u, gs.v, gs.w, gs.n, n_probes=N_PROBES, n_iters=N_ITERS,
+        seed=3))
+    wj = jnp.asarray(gs.w)
+    s_full = float(trace_similarity(wj, r_hat))
+    for budget in [0, 16, 64, 256]:
+        res = lgrass_sparsify(gs, budget=max(budget, 1),
+                              b_cap=max(64, budget))
+        mask = res.tree_mask if budget == 0 else res.edge_mask
+        s = float(trace_similarity(wj, r_hat, jnp.asarray(mask)))
+        rows.append((f"spectral.budget_n{gs.n}.b{budget}", 0.0,
+                     f"trace_frac={s / s_full:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps (CI smoke job)")
+    args = ap.parse_args()
+    rows = run(quick=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -46,7 +46,7 @@ def main() -> None:
                     help="small sizes (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table2,fig5,kernels,roofline,"
-                         "batch,recovery,phase1,bfs,service")
+                         "batch,recovery,phase1,bfs,service,spectral")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + config as JSON "
                          "(e.g. BENCH_pr4.json)")
@@ -54,8 +54,8 @@ def main() -> None:
 
     from benchmarks import (bench_batch, bench_bfs, bench_kernels,
                             bench_phase1, bench_recovery, bench_service,
-                            fig5_linearity, roofline, table2_breakdown,
-                            table3_execution_time)
+                            bench_spectral, fig5_linearity, roofline,
+                            table2_breakdown, table3_execution_time)
 
     suites = {
         "table3": table3_execution_time.run,
@@ -68,6 +68,7 @@ def main() -> None:
         "phase1": bench_phase1.run,
         "bfs": bench_bfs.run,
         "service": bench_service.run,
+        "spectral": bench_spectral.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     all_rows = []

@@ -24,6 +24,13 @@ from repro.core.sparsify import (
     phase1_device,
     phase1_device_batched,
 )
+from repro.core.spectral_probe import (
+    laplacian_spmv,
+    probe_criticality,
+    probe_edge_resistance,
+    probe_edge_resistance_batched,
+    trace_similarity,
+)
 
 __all__ = [
     "Graph",
@@ -40,11 +47,16 @@ __all__ = [
     "lgrass_device_batched",
     "lgrass_sparsify",
     "lgrass_sparsify_batch",
+    "laplacian_spmv",
     "log2_ceil",
     "next_pow2",
     "phase1_device",
     "phase1_device_batched",
+    "probe_criticality",
+    "probe_edge_resistance",
+    "probe_edge_resistance_batched",
     "recover_device",
     "recover_device_batched",
     "recover_host",
+    "trace_similarity",
 ]

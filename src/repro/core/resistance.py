@@ -143,6 +143,50 @@ def dense_effective_resistance_np(L_dense: np.ndarray, u, v) -> np.ndarray:
     return P[u, u] + P[v, v] - 2.0 * P[u, v]
 
 
+def spearman_np(a, b) -> float:
+    """Tie-aware Spearman rank correlation (no scipy in the pinned
+    environment; ties get average ranks, the textbook convention)."""
+    def _ranks(x):
+        x = np.asarray(x, np.float64)
+        _, inv, cnt = np.unique(x, return_inverse=True, return_counts=True)
+        start = np.cumsum(cnt) - cnt
+        return (start + (cnt - 1) / 2.0)[inv]
+
+    ra, rb = _ranks(a), _ranks(b)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    if denom == 0.0:  # constant ranks on either side: define as perfect
+        return 1.0
+    return float((ra * rb).sum() / denom)
+
+
+def probe_calibration_np(n, u, v, w, qu, qv, qw, r_hat,
+                         mask=None) -> dict:
+    """The calibration seam between the solver-free estimator
+    (core/spectral_probe.py) and this module's dense pinv oracle.
+
+    Computes the dense ground-truth R(qu_i, qv_i) on the (optionally
+    masked) graph and scores `r_hat` against it: Spearman rank
+    correlation of the raw resistances AND of the criticality ordering
+    (qw · R — the quantity the sparsifier actually sorts by), plus
+    relative-error quantiles. Small n only (the point of the seam:
+    the estimator earns trust here, then runs where this cannot).
+    """
+    L = dense_laplacian_np(n, u, v, w, mask=mask)
+    r_dense = dense_effective_resistance_np(L, qu, qv)
+    r_hat = np.asarray(r_hat, np.float64)
+    qw = np.asarray(qw, np.float64)
+    rel = np.abs(r_hat - r_dense) / np.maximum(r_dense, 1e-12)
+    return dict(
+        r_dense=r_dense,
+        spearman_er=spearman_np(r_hat, r_dense),
+        spearman_crit=spearman_np(qw * r_hat, qw * r_dense),
+        med_rel_err=float(np.median(rel)) if len(rel) else 0.0,
+        max_rel_err=float(rel.max()) if len(rel) else 0.0,
+    )
+
+
 def spectral_bounds_np(L_full: np.ndarray, L_sub: np.ndarray,
                        tol: float = 1e-9):
     """(lam_min, lam_max) of the pencil x^T L_sub x / x^T L_full x.

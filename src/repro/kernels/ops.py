@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.bitmap_intersect import bitmap_intersect_any as _bitmap
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.radix_hist import bucket_rank_hist as _brh
+from repro.kernels.spmv import laplacian_spmv as _spmv
 from repro.kernels.tree_dist import tree_dist_pairs as _tdp
 
 
@@ -96,6 +97,28 @@ def tree_dist_pairs(up, depth, a, b, *, block=128,
     out = _tdp(up, depth, a.astype(jnp.int32), b.astype(jnp.int32),
                block=block, interpret=_auto_interpret(interpret))
     return out[:m] if pad else out
+
+
+def laplacian_spmv_edges(u, v, w, x, *, block=512,
+                         interpret: Optional[bool] = None):
+    """y = L x via the gather-scatter spmv kernel. u/v/w: (M,) edge
+    list (w == 0.0 marks padding / masked slots); x: (n, P) float32
+    probe block. Edges are padded to a block multiple with zero-weight
+    self loops, which contribute exactly nothing."""
+    m = u.shape[0]
+    if m == 0:
+        return jnp.zeros_like(x)
+    block = min(block, max(m, 1))
+    pad = (-m) % block
+    if pad:
+        z = jnp.zeros((pad,), jnp.int32)
+        u = jnp.concatenate([u.astype(jnp.int32), z])
+        v = jnp.concatenate([v.astype(jnp.int32), z])
+        w = jnp.concatenate([w.astype(jnp.float32),
+                             jnp.zeros((pad,), jnp.float32)])
+    return _spmv(u.astype(jnp.int32), v.astype(jnp.int32),
+                 w.astype(jnp.float32), x.astype(jnp.float32),
+                 block=block, interpret=_auto_interpret(interpret))
 
 
 def bitmap_intersect_any(m1, m2, *, block=1024,

@@ -40,6 +40,16 @@ def bitmap_intersect_any_ref(m1: jax.Array, m2: jax.Array) -> jax.Array:
     return jnp.any(jnp.bitwise_and(m1, m2) != 0, axis=1)
 
 
+def laplacian_spmv_ref(u: jax.Array, v: jax.Array, w: jax.Array,
+                       x: jax.Array) -> jax.Array:
+    """y = L x via segment scatter-adds — the production formulation
+    (core/spectral_probe.laplacian_spmv), so the Pallas kernel is
+    validated against the exact code the estimator runs by default."""
+    d = x[u] - x[v]
+    c = w.astype(x.dtype)[:, None] * d
+    return jnp.zeros_like(x).at[u].add(c).at[v].add(-c)
+
+
 def tree_dist_pairs_ref(up: jax.Array, depth: jax.Array, a: jax.Array,
                         b: jax.Array) -> jax.Array:
     """Binary-lifting tree distance: the kernel's ground truth IS the

@@ -1,0 +1,86 @@
+"""Gather-scatter Laplacian spmv kernel (Pallas TPU) — the probe
+estimator's inner loop as dense MXU contractions.
+
+y = L x with L = Σ_e w_e (e_u − e_v)(e_u − e_v)ᵀ. Per grid step a block
+of C edges builds the signed incidence slab S = onehot(u) − onehot(v)
+((C, n), VPU compares), and two MXU matmuls do the gather AND the
+scatter: d = S @ x pulls both endpoints' probe rows in one contraction,
+and acc += Sᵀ @ (w ⊙ d) pushes the weighted differences back — no
+data-dependent addressing anywhere (the one-hot idiom of tree_dist.py /
+radix_hist.py). The (n, P) accumulator lives in VMEM scratch across the
+sequential grid and flushes once on the last block. Zero-weight rows
+(edge padding, masked batch slots) contribute exactly nothing, so the
+caller only has to zero w.
+
+VMEM bound: x, the accumulator, and the (C, n) slab must fit — the
+kernel targets the serving regime (n up to a few thousand).
+core/spectral_probe.py keeps the pure-XLA segment-sum spmv as the
+default path; this kernel is the TPU-native swap-in behind
+`use_spmv_kernel=True` (ops.py pads edge blocks and picks interpret
+mode per backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+
+def _spmv_kernel(u_ref, v_ref, w_ref, x_ref, out_ref, acc_ref, *,
+                 n_blocks: int, n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    u = u_ref[...]                                    # (C,) int32
+    v = v_ref[...]
+    w = w_ref[...]                                    # (C,) float32
+    x = x_ref[...]                                    # (n, P) float32
+    c = u.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, n), 1)
+    # signed incidence slab: +1 at u, −1 at v, 0 elsewhere (a self-loop
+    # padding row u == v cancels to all-zero on its own)
+    s = ((u[:, None] == cols).astype(jnp.float32)
+         - (v[:, None] == cols).astype(jnp.float32))
+    d = jnp.dot(s, x, preferred_element_type=jnp.float32)       # gather
+    acc_ref[...] += jnp.dot(s.T, w[:, None] * d,                # scatter
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_blocks - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def laplacian_spmv(u: jax.Array, v: jax.Array, w: jax.Array,
+                   x: jax.Array, *, block: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """u, v: (M,) int32; w: (M,) float32 (0.0 on padding slots);
+    x: (n, P) float32 probe block. Returns (n, P) float32 y = L x."""
+    m = u.shape[0]
+    n, p = x.shape
+    assert m % block == 0, "pad edges to a block multiple"
+    n_blocks = m // block
+    kernel = functools.partial(_spmv_kernel, n_blocks=n_blocks, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(u, v, w, x)

@@ -148,3 +148,77 @@ def test_bitmap_intersect(l, w):
     out = ops.bitmap_intersect_any(m1, m2, interpret=True)
     want = ref.bitmap_intersect_any_ref(m1, m2)
     assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def _random_edges(n, m, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = ((u + 1 + rng.integers(0, n - 1, m)) % n).astype(np.int32)
+    w = rng.lognormal(0.0, 1.0, m).astype(np.float32)
+    return u, v, w
+
+
+@pytest.mark.parametrize("n,m,p,block", [
+    (40, 64, 8, 64),
+    (64, 300, 16, 128),
+    (100, 257, 4, 128),   # non-block-multiple edge count
+    (128, 1000, 1, 512),
+])
+def test_spmv_kernel_matches_ref(n, m, p, block):
+    """Laplacian spmv kernel == plain gather/scatter ref. float32 sums
+    accumulate in different orders (one-hot matmul vs scatter-add), so
+    allclose, not bit-equal — same contract as flash_attention."""
+    u, v, w = _random_edges(n, m, seed=n + m)
+    rng = np.random.default_rng(p)
+    x = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    uj, vj, wj = jnp.asarray(u), jnp.asarray(v), jnp.asarray(w)
+    out = ops.laplacian_spmv_edges(uj, vj, wj, x, block=block,
+                                   interpret=True)
+    want = ref.laplacian_spmv_ref(uj, vj, wj, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+    # a Laplacian annihilates constants: L·1 = 0
+    ones = jnp.ones((n, p), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.laplacian_spmv_edges(uj, vj, wj, ones,
+                                            block=block, interpret=True)),
+        0.0, atol=1e-4)
+
+
+def test_spmv_kernel_degenerate_edges():
+    """m == 0 returns zeros; zero-weight slots (the padding convention)
+    contribute exactly nothing."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((16, 4)),
+                    jnp.float32)
+    z = jnp.zeros((0,), jnp.int32)
+    out = ops.laplacian_spmv_edges(z, z, jnp.zeros((0,), jnp.float32), x,
+                                   interpret=True)
+    assert np.array_equal(np.asarray(out), np.zeros((16, 4), np.float32))
+    u, v, w = _random_edges(16, 40, seed=3)
+    keep = np.random.default_rng(4).random(40) < 0.5
+    wz = np.where(keep, w, 0.0).astype(np.float32)
+    out_masked = ops.laplacian_spmv_edges(
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(wz), x,
+        block=32, interpret=True)
+    want = ref.laplacian_spmv_ref(jnp.asarray(u[keep]),
+                                  jnp.asarray(v[keep]),
+                                  jnp.asarray(w[keep]), x)
+    np.testing.assert_allclose(np.asarray(out_masked), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_spmv_kernel_through_estimator():
+    """The estimator's use_spmv_kernel path lands allclose to the
+    default segment-sum path at the program level (same probes, same
+    filter, different spmv engine)."""
+    from repro.core.spectral_probe import probe_edge_resistance
+
+    from repro.core.graph import random_connected_graph
+
+    g = random_connected_graph(48, 96, seed=9)
+    a = np.asarray(probe_edge_resistance(g.u, g.v, g.w, g.n,
+                                         n_probes=32, n_iters=32, seed=1))
+    b = np.asarray(probe_edge_resistance(g.u, g.v, g.w, g.n,
+                                         n_probes=32, n_iters=32, seed=1,
+                                         use_spmv_kernel=True))
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)

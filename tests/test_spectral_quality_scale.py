@@ -1,0 +1,145 @@
+"""Spectral quality at 10^5–10^6 nodes, judged entirely solver-free.
+
+tests/test_spectral_quality.py pins quality against the dense pinv — an
+O(n³) oracle that dies around 10⁴ nodes. This tier runs the same
+*judgement* at sizes the paper targets, scoring sparsifiers with the
+probe estimator (`core/spectral_probe.py`, calibrated against that very
+oracle in tests/test_spectral_probe.py): trace similarity
+tr(L_G⁺ L_H) = Σ_{e∈H} w_e R̂_G(e), where larger = spectrally closer to
+G and the full graph scores ≈ n − 1. No dense Laplacian is ever
+materialised here.
+
+Assertions, per graph family (chain+chords / feeder / grid / random):
+
+  * every per-edge estimate is finite at n = LGRASS_SCALE_N;
+  * score(tree) < score(LGRASS sparsifier) ≤ score(full graph) — the
+    accepted chords buy real spectral mass;
+  * score(LGRASS) > mean score of seeded random-chord controls (same
+    tree, same #accepted, chords drawn uniformly) — the criticality
+    ordering beats blind acceptance (measured margins +3.3..+9.1 trace
+    units at n = 10⁵, against control-draw noise well under that);
+  * score is monotone in budget (accepted sets are prefix-monotone in
+    the criticality order, so this is exact, not statistical);
+  * on families where the numpy oracle's O(diameter·L) BFS is feasible
+    (grid, random — NOT the diameter-10⁵ chain/feeder), the device
+    mask still bit-matches `baseline_sparsify`.
+
+Budgets here are deliberately lean (P = 16 probes, k = 32 rounds —
+rank-level, not value-level, accuracy): CI pays ~45 s for the whole
+10⁵ tier. The 10⁶ variants run the same checks at P = 8 and are marked
+`slow` (excluded from tier-1; enable with --run-slow).
+
+LGRASS_SCALE_N overrides the tier size (default 100_000).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.baseline import baseline_sparsify
+from repro.core.graph import (Graph, feeder_like_graph,
+                              powergrid_like_graph,
+                              random_connected_graph)
+from repro.core.sparsify import lgrass_sparsify
+from repro.core.spectral_probe import probe_edge_resistance, trace_similarity
+
+SCALE_N = int(os.environ.get("LGRASS_SCALE_N", "100000"))
+BUDGET = 48
+B_CAP = 64
+N_PROBES = 16
+N_ITERS = 32
+
+
+def chain_with_chords(n: int, chords: int, seed: int = 0) -> Graph:
+    """A path 0–1–…–(n−1) plus ~`chords` random long-range chords,
+    built fully vectorised (no python loop survives 10⁶ nodes)."""
+    rng = np.random.default_rng(seed)
+    cu = np.arange(n - 1, dtype=np.int64)
+    a = rng.integers(0, n, chords)
+    b = rng.integers(0, n, chords)
+    keep = a != b
+    lo = np.minimum(a, b)[keep]
+    hi = np.maximum(a, b)[keep]
+    key = np.unique(lo * np.int64(n) + hi)  # dedupe chords
+    lo, hi = key // n, key % n
+    far = hi != lo + 1                      # drop chords shadowing the chain
+    u = np.concatenate([cu, lo[far]]).astype(np.int32)
+    v = np.concatenate([cu + 1, hi[far]]).astype(np.int32)
+    w = rng.lognormal(0.0, 1.0, len(u)).astype(np.float32)
+    return Graph(n=n, u=u, v=v, w=w)
+
+
+def _families(n: int):
+    side = max(2, int(round(n ** 0.5)))
+    return {
+        "chain": lambda: chain_with_chords(n, max(64, n // 32), seed=1),
+        "feeder": lambda: feeder_like_graph(n, max(64, n // 50),
+                                            span=24, seed=1),
+        "grid": lambda: powergrid_like_graph(side, 0.25, seed=1),
+        "random": lambda: random_connected_graph(n, n, seed=1),
+    }
+
+
+def _scores(g: Graph, n_probes: int, n_iters: int):
+    """(result, r̂, score_tree, score_lgrass, score_full, mean ctrl)."""
+    res = lgrass_sparsify(g, budget=BUDGET, b_cap=B_CAP)
+    r_hat = np.asarray(probe_edge_resistance(
+        g.u, g.v, g.w, g.n, n_probes=n_probes, n_iters=n_iters, seed=2))
+    assert np.isfinite(r_hat).all()
+    assert (r_hat >= 0.0).all()
+    wj = jnp.asarray(g.w)
+    rj = jnp.asarray(r_hat)
+    s_tree = float(trace_similarity(wj, rj, jnp.asarray(res.tree_mask)))
+    s_lgr = float(trace_similarity(wj, rj, jnp.asarray(res.edge_mask)))
+    s_full = float(trace_similarity(wj, rj))
+    rng = np.random.default_rng(7)
+    off_idx = np.flatnonzero(~res.tree_mask)
+    ctrls = []
+    for _ in range(5):
+        pick = rng.choice(off_idx, size=res.n_accepted, replace=False)
+        ctrl = res.tree_mask.copy()
+        ctrl[pick] = True
+        ctrls.append(float(trace_similarity(wj, rj, jnp.asarray(ctrl))))
+    return res, r_hat, s_tree, s_lgr, s_full, float(np.mean(ctrls))
+
+
+@pytest.mark.parametrize("family", ["chain", "feeder", "grid", "random"])
+def test_scale_quality(family):
+    g = _families(SCALE_N)[family]()
+    res, r_hat, s_tree, s_lgr, s_full, s_ctrl = _scores(
+        g, N_PROBES, N_ITERS)
+    assert res.n_accepted == BUDGET
+    # chords buy spectral mass; the sparsifier never exceeds the graph
+    assert s_tree < s_lgr <= s_full
+    # criticality-ordered acceptance beats blind acceptance
+    assert s_lgr > s_ctrl
+    # exact (not statistical): smaller budget ⊂ larger budget
+    small = lgrass_sparsify(g, budget=16, b_cap=B_CAP)
+    assert (small.accepted_mask <= res.accepted_mask).all()
+    wj, rj = jnp.asarray(g.w), jnp.asarray(r_hat)
+    s_small = float(trace_similarity(wj, rj, jnp.asarray(small.edge_mask)))
+    assert s_small <= s_lgr
+
+
+@pytest.mark.parametrize("family", ["grid", "random"])
+def test_scale_matches_numpy_oracle(family):
+    """The device pipeline stays bit-identical to the numpy greedy at
+    scale. Grid/random only: the oracle's level-by-level BFS is
+    O(diameter·L) — ~1 s on diameter-√n families, unusable on the
+    diameter-n chain and feeder."""
+    g = _families(SCALE_N)[family]()
+    res = lgrass_sparsify(g, budget=BUDGET, b_cap=B_CAP)
+    ref = baseline_sparsify(g, budget=BUDGET)
+    np.testing.assert_array_equal(res.edge_mask, ref.edge_mask)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", ["chain", "random"])
+def test_scale_quality_1e6(family):
+    g = _families(1_000_000)[family]()
+    res, _, s_tree, s_lgr, s_full, s_ctrl = _scores(g, 8, N_ITERS)
+    assert res.n_accepted == BUDGET
+    assert s_tree < s_lgr <= s_full
+    assert s_lgr > s_ctrl

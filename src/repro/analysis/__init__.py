@@ -1,0 +1,50 @@
+"""Static analysis for the device pipeline: machine-checked invariants.
+
+Every hard bug this repo has shipped and fixed — the int32 packed-key
+overflow past n = PACKED_KEY_MAX_N, float32 INF-depth poisoning on
+disconnected forests, x64 int-promotion breakage, hidden host syncs on
+the async serving path — is a *statically detectable* property of the
+traced program. This package turns those properties into enforced
+contracts, in two layers:
+
+  * **jaxpr auditor** (`jaxpr_audit` + `ranges`) — trace the public jit
+    programs over the bucket signatures `SparsifyService` actually
+    compiles, then walk the closed jaxprs: no f64 leaks outside the x64
+    leg, no callback/host-sync primitives, loop budgets match the
+    documented O(log n)/chunked shapes, and an interval-arithmetic
+    range propagator proves every integer pack fits its dtype (the
+    n ≈ 46k BFS fallback is now the *derived* constant
+    `bfs.PACKED_KEY_MAX_N`, asserted here).
+  * **AST lint** (`lint`, runnable as `python -m repro.analysis`) —
+    repo-specific source rules (rule catalog in `lint.RULES`): no host
+    numpy on device-path modules, pinned dtype factories, sanctioned
+    host syncs only, padded edge-list functions must thread a mask,
+    no stray callbacks. Findings carry rule IDs and file:line; the
+    baseline file (`baseline.json`) suppresses the justified
+    exceptions so CI fails only on regressions.
+
+See README "Static analysis" for the rule catalog and CI contract
+(`tier1-static`).
+"""
+from repro.analysis.jaxpr_audit import (  # noqa: F401
+    AuditReport,
+    audit_program,
+    audit_service,
+    check_derived_constants,
+    collect_eqns,
+    standard_program_audits,
+)
+from repro.analysis.lint import (  # noqa: F401
+    Finding,
+    RULES,
+    apply_baseline,
+    load_baseline,
+    run_lint,
+)
+from repro.analysis.ranges import (  # noqa: F401
+    Interval,
+    RangeFinding,
+    check_ranges,
+    derive_packed_key_max_n,
+    packed_key_interval,
+)

@@ -1,0 +1,163 @@
+"""CLI for the static-analysis pass: ``python -m repro.analysis``.
+
+Exit codes: 0 — clean (all findings baselined); 1 — new lint findings
+or failed jaxpr audits; 2 — a ``--seed-bug`` run whose injected bug
+was caught (the expected outcome of a seeded run).
+
+    python -m repro.analysis                    # lint + jaxpr audit
+    python -m repro.analysis --skip-jaxpr src/  # lint only, other tree
+    python -m repro.analysis --json report.json # machine-readable
+    python -m repro.analysis --seed-bug inf-depth     # must exit != 0
+    python -m repro.analysis --seed-bug pack-overflow # must exit != 0
+
+The seeded bugs re-create the repo's two worst shipped bugs as witness
+programs and assert the analyzers still catch them:
+
+  * ``inf-depth`` — the PR 5 poisoning: an unreachable-depth sentinel
+    (INT32_MAX) cast into float32 and multiplied by an edge weight
+    without the ``finite_depth`` guard.
+  * ``pack-overflow`` — the packed BFS relaxation key dist·(n+1)+id
+    traced one past ``PACKED_KEY_MAX_N``, where it provably exceeds
+    int32.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _seeded_bug(which: str):
+    """Trace the witness program for the named historical bug and
+    return the range findings (non-empty iff the analyzers work)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.ranges import INT32_MAX, Interval, check_ranges
+    from repro.core.bfs import PACKED_KEY_MAX_N
+
+    if which == "inf-depth":
+        # PR 5 regression: depth carries the INT32_MAX "unreachable"
+        # sentinel; the buggy effective-weight path casts it straight
+        # into f32 and multiplies by the edge weight — no clamp.
+        def buggy_eff(depth, w):
+            return depth.astype(jnp.float32) * w
+
+        spec_i = jax.ShapeDtypeStruct((8,), jnp.int32)
+        spec_f = jax.ShapeDtypeStruct((8,), jnp.float32)
+        return check_ranges(
+            buggy_eff,
+            [Interval.of(0, 63, sentinel=INT32_MAX), Interval.of(0, 1)],
+            spec_i, spec_f)
+
+    if which == "pack-overflow":
+        n = PACKED_KEY_MAX_N + 1
+
+        def pack(dist, ids, base):
+            return dist * base + ids
+
+        spec = jax.ShapeDtypeStruct((8,), jnp.int32)
+        return check_ranges(
+            pack,
+            [Interval.of(0, n), Interval.of(0, n), Interval.const(n + 1)],
+            spec, spec, jax.ShapeDtypeStruct((), jnp.int32))
+
+    raise SystemExit(f"unknown --seed-bug {which!r}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo static analysis: AST lint + jaxpr audit")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or trees to lint (default: src/repro)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full machine-readable report here")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="lint only; skip tracing the device programs")
+    ap.add_argument("--baseline", default=None,
+                    help="alternate baseline file (default: the "
+                         "package's baseline.json)")
+    ap.add_argument("--seed-bug", choices=("inf-depth", "pack-overflow"),
+                    default=None,
+                    help="inject a known historical bug as a witness "
+                         "program; exits 2 when (and only when) the "
+                         "analyzers catch it")
+    ns = ap.parse_args(argv)
+
+    report = {"lint": [], "suppressed": 0, "audits": [],
+              "derived_constants": [], "seeded": None, "ok": True}
+    rc = 0
+
+    if ns.seed_bug:
+        findings = _seeded_bug(ns.seed_bug)
+        report["seeded"] = {
+            "bug": ns.seed_bug,
+            "caught": bool(findings),
+            "findings": [str(f) for f in findings],
+        }
+        if findings:
+            print(f"seeded bug '{ns.seed_bug}' CAUGHT:")
+            for f in findings:
+                print(f"  {f}")
+            rc = 2
+        else:
+            print(f"seeded bug '{ns.seed_bug}' NOT caught — the "
+                  f"analyzers have regressed", file=sys.stderr)
+            report["ok"] = False
+            rc = 0  # a miss must look "clean" so the CI seeded-run
+            # assertion (`! python -m repro.analysis --seed-bug ...`)
+            # fails loudly instead of passing by accident
+        if ns.json:
+            with open(ns.json, "w", encoding="utf-8") as f:
+                json.dump(report, f, indent=2)
+        return rc
+
+    from repro.analysis.lint import (
+        apply_baseline,
+        load_baseline,
+        run_lint,
+    )
+
+    findings = run_lint(ns.paths)
+    new, suppressed = apply_baseline(findings, load_baseline(ns.baseline))
+    report["lint"] = [f.as_dict() for f in new]
+    report["suppressed"] = len(suppressed)
+    for f in new:
+        print(f.format())
+    if new:
+        rc = 1
+        report["ok"] = False
+    print(f"lint: {len(new)} new finding(s), {len(suppressed)} "
+          f"baselined")
+
+    if not ns.skip_jaxpr:
+        from repro.analysis.jaxpr_audit import (
+            check_derived_constants,
+            standard_program_audits,
+        )
+
+        derived = check_derived_constants()
+        report["derived_constants"] = derived
+        for msg in derived:
+            print(f"derived-constant: {msg}")
+        audits = standard_program_audits()
+        report["audits"] = [r.as_dict() for r in audits]
+        bad = [r for r in audits if not r.ok]
+        for r in bad:
+            for msg in r.findings:
+                print(f"audit[{r.name}]: {msg}")
+        print(f"jaxpr audit: {len(audits)} programs, "
+              f"{len(bad)} failing")
+        if derived or bad:
+            rc = 1
+            report["ok"] = False
+
+    if ns.json:
+        with open(ns.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,357 @@
+"""AST lint pass: repo-specific source rules for the device pipeline.
+
+The jaxpr auditor (`jaxpr_audit`) checks what the traced programs *do*;
+this pass checks what the source *says* — catching the bug classes the
+tracer can't see (a host `numpy` call silently de-jitting a path, an
+unpinned dtype factory that flips meaning under `JAX_ENABLE_X64`, a
+padded edge-list function that forgot to thread its validity mask).
+
+Rules (IDs are stable; see README "Static analysis"):
+
+  ANA001  host numpy MIXED into a jnp function on a device path. A
+          function that uses only numpy is a host helper by
+          construction; one that interleaves ``np.*`` with ``jnp.*``
+          either de-jits silently or constant-folds a traced value.
+          Modules under core/ kernels/ serve/ sparse/ are device
+          paths; functions whose names end in ``_np``/``_numpy``/
+          ``_host`` and the explicit host modules (``_host.py``,
+          ``resistance.py``) are exempt by convention.
+  ANA002  unpinned dtype factory on a device path: ``jnp.zeros/ones/
+          empty/eye/arange/linspace`` without ``dtype=``. Under x64
+          the default flips to f64/i64 and the program silently
+          recompiles wide. ``full`` inherits its dtype from the fill
+          value, so it is only flagged when the fill is a bare Python
+          literal (weak type) and no ``dtype=`` is given.
+  ANA003  host sync (``jax.device_get`` / ``.block_until_ready()``)
+          outside the sanctioned sync points. Each legitimate sync
+          (service drain, warmup, host-facing result decode) is
+          baselined with a justification; a NEW sync fails CI.
+  ANA004  padded edge-list function without a validity mask: a public
+          function taking ``u``, ``v`` and ``n`` operates on the padded
+          edge list and must accept a mask parameter
+          (``edge_valid``/``edge_mask``/``tree_mask``/``valid``/
+          ``mask``/``is_offtree``/``crossing``) or it will process
+          garbage pad lanes.
+  ANA005  callback primitive (``pure_callback``/``io_callback``/
+          ``debug_callback``/``jax.debug.print``) — these re-enter the
+          host mid-program and break the one-dispatch serving contract.
+
+Findings carry (rule, path, line, symbol, message). `baseline.json`
+sits next to this module: a list of ``{rule, path, symbol, reason}``
+entries (symbol ``"*"`` matches the whole file) suppressing the
+justified exceptions, so `python -m repro.analysis` fails only on
+regressions.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEVICE_PATH_DIRS = ("core", "kernels", "serve", "sparse")
+HOST_EXEMPT_FILES = ("_host.py", "resistance.py")
+HOST_EXEMPT_SUFFIXES = ("_np", "_numpy", "_host")
+
+DTYPE_FACTORIES = ("zeros", "ones", "empty", "full", "eye", "arange",
+                   "linspace")
+SYNC_ATTRS = ("device_get", "block_until_ready")
+CALLBACK_ATTRS = ("pure_callback", "io_callback", "debug_callback")
+MASK_PARAM_NAMES = ("edge_valid", "edge_mask", "tree_mask", "valid",
+                    "mask", "is_offtree", "crossing")
+# Known typed-scalar constructors that make a `full` fill value pin the
+# dtype on its own.
+TYPED_SCALAR_NAMES = frozenset({
+    "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "bfloat16", "float32", "float64", "bool_",
+})
+
+RULES: Dict[str, str] = {
+    "ANA001": "host numpy inside a device-path function",
+    "ANA002": "dtype factory without an explicit dtype= pin",
+    "ANA003": "host sync outside the sanctioned sync points",
+    "ANA004": "padded edge-list function without a validity mask param",
+    "ANA005": "host callback inside a device program",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    symbol: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.symbol}] " \
+               f"{self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """'jnp.zeros' / 'jax.debug.print' for an Attribute/Name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_typed_scalar_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _attr_chain(node.func)
+    return chain.split(".")[-1] in TYPED_SCALAR_NAMES
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, relpath: str, device_path: bool):
+        self.path = path
+        self.relpath = relpath
+        self.device_path = device_path
+        self.fname = os.path.basename(path)
+        self.findings: List[Finding] = []
+        self._func_stack: List[str] = []
+        # per-function frames for the numpy/jnp mixing check (ANA001)
+        self._np_uses: List[List[Tuple[ast.AST, str]]] = []
+        self._uses_jnp: List[bool] = []
+        # module-local aliases that resolve to numpy ("np", "numpy", ...)
+        self.numpy_aliases = set()
+        self.jnp_aliases = set()
+        self.jax_aliases = set()
+
+    # -- scope helpers -------------------------------------------------
+    @property
+    def symbol(self) -> str:
+        return self._func_stack[-1] if self._func_stack else "<module>"
+
+    def _emit(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath,
+            line=getattr(node, "lineno", 0), symbol=self.symbol,
+            message=message))
+
+    def _host_exempt(self, name: Optional[str] = None) -> bool:
+        if self.fname in HOST_EXEMPT_FILES:
+            return True
+        names = self._func_stack + ([name] if name else [])
+        return any(f.endswith(HOST_EXEMPT_SUFFIXES) for f in names)
+
+    # -- imports -------------------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            root = a.name.split(".")[0]
+            name = a.asname or root
+            if a.name == "jax.numpy":
+                self.jnp_aliases.add(name)
+            elif root == "numpy":
+                self.numpy_aliases.add(name)
+            elif root == "jax":
+                self.jax_aliases.add(name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "jax" :
+            for a in node.names:
+                if a.name == "numpy":
+                    self.jnp_aliases.add(a.asname or "numpy")
+        self.generic_visit(node)
+
+    # -- functions -----------------------------------------------------
+    def _visit_func(self, node):
+        self._check_mask_param(node)
+        self._func_stack.append(node.name)
+        self._np_uses.append([])
+        self._uses_jnp.append(False)
+        self.generic_visit(node)
+        np_uses = self._np_uses.pop()
+        mixed = self._uses_jnp.pop()
+        self._func_stack.pop()
+        if mixed and np_uses and self.device_path \
+                and not self._host_exempt(node.name):
+            sym = node.name
+            for use, chain in np_uses:
+                self.findings.append(Finding(
+                    rule="ANA001", path=self.relpath,
+                    line=getattr(use, "lineno", 0), symbol=sym,
+                    message=f"host numpy call `{chain}` interleaved "
+                            f"with jnp on a device path (de-jits or "
+                            f"constant-folds a traced value)"))
+        elif np_uses and self._np_uses:
+            # nested host helper inside a traced function: the numpy
+            # use belongs to the enclosing frame's mixing decision
+            # only if the helper isn't name-exempt.
+            if not node.name.endswith(HOST_EXEMPT_SUFFIXES):
+                self._np_uses[-1].extend(np_uses)
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _check_mask_param(self, node):
+        if not self.device_path or node.name.startswith("_") \
+                or self.fname in HOST_EXEMPT_FILES \
+                or node.name.endswith(HOST_EXEMPT_SUFFIXES):
+            return
+        if self._func_stack:      # only module-level public API
+            return
+        args = node.args
+        names = [a.arg for a in args.posonlyargs + args.args
+                 + args.kwonlyargs]
+        if "u" in names and "v" in names and "n" in names:
+            if not any(nm in MASK_PARAM_NAMES for nm in names):
+                self.findings.append(Finding(
+                    rule="ANA004", path=self.relpath,
+                    line=getattr(node, "lineno", 0), symbol=node.name,
+                    message="public edge-list function takes "
+                            "(u, v, .., n) but no validity-mask "
+                            "parameter "
+                            f"({', '.join(MASK_PARAM_NAMES[:3])}, ...)"
+                            " — pad lanes will be processed as real "
+                            "edges"))
+
+    # -- calls / attribute use ----------------------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        chain = _attr_chain(node)
+        root = chain.split(".")[0]
+        if self._np_uses:
+            # Buffer for the per-function mixing decision (ANA001):
+            # record np.* uses; note jnp/jax use as the "traced" marker.
+            if root in self.numpy_aliases:
+                self._np_uses[-1].append((node, chain))
+            elif root in self.jnp_aliases or root in self.jax_aliases \
+                    or root == "lax":
+                self._uses_jnp[-1] = True
+        # don't recurse: _attr_chain consumed the whole chain
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    def visit_Call(self, node: ast.Call):
+        chain = _attr_chain(node.func)
+        parts = chain.split(".")
+        leaf = parts[-1]
+        root = parts[0] if parts else ""
+
+        # ANA002 — dtype factories on device paths (jnp only; host
+        # numpy defaults don't feed traced programs directly)
+        if self.device_path and leaf in DTYPE_FACTORIES \
+                and root in self.jnp_aliases:
+            # dtype may be keyword or positional: zeros/ones/empty take
+            # it as arg 2, full as arg 3 (after the fill value)
+            pos_slot = {"zeros": 1, "ones": 1, "empty": 1, "full": 2}
+            has_dtype = any(kw.arg == "dtype" for kw in node.keywords) \
+                or len(node.args) > pos_slot.get(leaf, 99)
+            if leaf == "full":
+                # dtype otherwise follows the fill value; only a bare
+                # literal fill is weakly typed
+                hazard = (len(node.args) >= 2
+                          and isinstance(node.args[1], ast.Constant))
+            else:
+                hazard = True
+            if not has_dtype and hazard:
+                self._emit(
+                    "ANA002", node,
+                    f"`{chain}(...)` without dtype= — default dtype "
+                    f"flips under JAX_ENABLE_X64 and recompiles wide")
+
+        # ANA003 — host syncs
+        if leaf in SYNC_ATTRS:
+            self._emit(
+                "ANA003", node,
+                f"host sync `{chain}` — every sync point must be "
+                f"sanctioned (baseline) or the async path stalls")
+
+        # ANA005 — callbacks
+        if leaf in CALLBACK_ATTRS or chain.endswith("debug.print"):
+            self._emit(
+                "ANA005", node,
+                f"host callback `{chain}` re-enters the host "
+                f"mid-program (breaks the one-dispatch contract)")
+        self.generic_visit(node)
+
+
+def _iter_py_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", ".git")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _is_device_path(relpath: str) -> bool:
+    parts = relpath.replace(os.sep, "/").split("/")
+    return any(d in parts for d in DEVICE_PATH_DIRS)
+
+
+def lint_file(path: str, relpath: Optional[str] = None) -> List[Finding]:
+    relpath = relpath or path
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="ANA000", path=relpath,
+                        line=e.lineno or 0, symbol="<module>",
+                        message=f"syntax error: {e.msg}")]
+    v = _Visitor(path, relpath, _is_device_path(relpath))
+    v.visit(tree)
+    return v.findings
+
+
+def run_lint(paths: Sequence[str]) -> List[Finding]:
+    """Lint files/trees; paths in findings are relative to the cwd."""
+    findings: List[Finding] = []
+    for p in paths:
+        files = _iter_py_files(p) if os.path.isdir(p) else [p]
+        for fp in files:
+            findings.extend(lint_file(fp, os.path.relpath(fp)))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ---------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_baseline(path: Optional[str] = None) -> List[dict]:
+    path = path or BASELINE_PATH
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    return list(data.get("suppressions", data) if isinstance(data, dict)
+                else data)
+
+
+def _baseline_matches(entry: dict, finding: Finding) -> bool:
+    if entry.get("rule") != finding.rule:
+        return False
+    bpath = entry.get("path", "").replace("\\", "/")
+    fpath = finding.path.replace("\\", "/")
+    if not (fpath == bpath or fpath.endswith("/" + bpath)):
+        return False
+    sym = entry.get("symbol", "*")
+    return sym == "*" or sym == finding.symbol
+
+
+def apply_baseline(
+    findings: Sequence[Finding], baseline: Sequence[dict],
+) -> Tuple[List[Finding], List[Finding]]:
+    """Split into (new, suppressed)."""
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        if any(_baseline_matches(e, f) for e in baseline):
+            suppressed.append(f)
+        else:
+            new.append(f)
+    return new, suppressed

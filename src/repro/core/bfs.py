@@ -39,6 +39,7 @@ vmap (the padded ``GraphBatch`` pipeline).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -49,6 +50,31 @@ from repro.core.pow2 import log2_ceil as _log2_ceil
 INF = jnp.iinfo(jnp.int32).max
 
 BFS_ENGINES = ("doubling", "levels")
+
+
+def packed_key_bound(n: int) -> int:
+    """Largest packed relaxation key `bfs_doubling` can produce at `n`.
+
+    The fused scatter-min key is dist·(n+1) + id with dist clamped to
+    [0, n] and id in [0, n]; the maximum is n·(n+1) + n = (n+1)² − 1.
+    This is the symbolic bound the static range checker
+    (repro.analysis.ranges) re-derives from the traced program.
+    """
+    return (n + 1) * (n + 1) - 1
+
+
+# Largest n for which the packed key provably fits int32:
+# (n+1)² − 1 <= INT32_MAX  <=>  n <= isqrt(2³¹) − 1  ==  46339.
+# Beyond this the relaxation runs unpacked as two scatter-mins
+# (bit-identical, one extra scatter per round). Exported so the range
+# checker asserts the switch point instead of trusting an inlined magic
+# number; tests/test_bfs_doubling.py pins both sides of the boundary.
+PACKED_KEY_MAX_N = math.isqrt(2 ** 31) - 1
+
+# Largest n for which `root_tree_euler` can pack an arc's (tail, head)
+# pair into one u32 radix key (16 bits each); beyond it the u64 pair
+# sort runs instead. Same contract: exported for the range checker.
+EULER_PACK_MAX_N = 0xFFFF
 
 
 def finite_depth(depth: jax.Array) -> jax.Array:
@@ -178,8 +204,8 @@ def bfs_doubling(
     Per-round cost is kept to ONE scatter: the relaxation minimum and
     the climb's re-anchor witness come out of a single scatter-min of
     the packed key dist[u]·(n+1) + u (dist is clamped to ≤ n, so the
-    key fits int32 up to n ≈ 46k; beyond that the same pass runs
-    unpacked as two scatter-mins). The climb is truncated to ~0.6·log n
+    key fits int32 up to n = PACKED_KEY_MAX_N; beyond that the same
+    pass runs unpacked as two scatter-mins). The climb is truncated to ~0.6·log n
     steps — correction jumps of 2^0.6·log ≫ the per-round reach growth,
     measured faster at every size with identical convergence.
 
@@ -197,7 +223,7 @@ def bfs_doubling(
     nn = jnp.int32(n)
     log = _log2_ceil(n + 1)
     climb_len = max(2, (3 * log) // 5)
-    packed = (n + 1) * (n + 1) < 2 ** 31
+    packed = n <= PACKED_KEY_MAX_N  # packed_key_bound(n) fits int32
     base = jnp.int32(n + 1)
     KINF = jnp.iinfo(jnp.int32).max
 
@@ -356,7 +382,7 @@ def root_tree_euler(
     rev = jnp.where(aiota < L, aiota + L, aiota - L)
 
     # -- 1. sorted out-arc blocks ---------------------------------------
-    if n <= 0xFFFF:  # (tail, head) packs into one 4-pass u32 key
+    if n <= EULER_PACK_MAX_N:  # (tail, head) packs into one u32 key
         key = (tail.astype(jnp.uint32) << 16) | head.astype(jnp.uint32)
         S = radix_argsort_u32(jnp.where(valid, key,
                                         jnp.uint32(0xFFFFFFFF)))
@@ -460,7 +486,12 @@ def select_root(
 
 @functools.partial(jax.jit, static_argnames=("n",))
 def effective_weights(
-    u: jax.Array, v: jax.Array, w: jax.Array, depth: jax.Array, n: int
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    depth: jax.Array,
+    n: int,
+    edge_valid: Optional[jax.Array] = None,
 ) -> jax.Array:
     """feGRASS-style depth-scaled effective weight (the EFF subroutine).
 
@@ -470,6 +501,15 @@ def effective_weights(
     disconnected input the raw INT32_MAX would cast to float32 ≈ 2.1e9
     and poison every weight it touches (`finite_depth`; the numpy
     mirror applies the same guard).
+
+    edge_valid: optional (L,) padding mask — padding slots are zeroed
+    so their (garbage-endpoint) gathers can never leak a value out.
+    Downstream consumers mask again (the criticality sort forces
+    invalid keys to -inf), so threading the mask here changes no real
+    slot.
     """
     d = finite_depth(depth).astype(jnp.float32)
-    return w * (d[u] + d[v] + 1.0)
+    eff = w * (d[u] + d[v] + 1.0)
+    if edge_valid is not None:
+        eff = jnp.where(edge_valid, eff, 0.0)
+    return eff

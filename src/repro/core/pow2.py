@@ -7,9 +7,23 @@ be re-implemented per module; this is the single home (tests/test_pow2.py).
 """
 from __future__ import annotations
 
+# Largest power of two representable as a (positive) int32 — the hard
+# ceiling for every pow2 pad target / bucket size that ends up as an
+# int32 shape constant or index on device. Exported for the static
+# range checker (repro.analysis.ranges); `next_pow2` enforces it.
+MAX_POW2_INT32 = 1 << 30
+
 
 def next_pow2(x: int) -> int:
-    """Smallest power of two >= x (x >= 1)."""
+    """Smallest power of two >= x (x >= 1), int32-safe.
+
+    Raises for x > MAX_POW2_INT32: the next bucket would overflow the
+    int32 shape/index arithmetic every consumer of these pad targets
+    performs on device.
+    """
+    if x > MAX_POW2_INT32:
+        raise ValueError(
+            f"pow2 bucket for {x} exceeds MAX_POW2_INT32={MAX_POW2_INT32}")
     p = 1
     while p < x:
         p <<= 1

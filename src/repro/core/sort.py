@@ -36,6 +36,14 @@ import jax.numpy as jnp
 _CHUNK = 1024
 _NBUCKETS = 256
 
+# Symbolic bounds the static range checker (repro.analysis.ranges)
+# consumes: every per-pass digit lies in [0, RADIX_MAX_DIGIT], and the
+# int32 rank/offset arithmetic (cumsums of per-digit counts) is exact
+# for any padded length up to RADIX_RANK_MAX_LEN elements.
+RADIX_NBUCKETS = _NBUCKETS
+RADIX_MAX_DIGIT = _NBUCKETS - 1
+RADIX_RANK_MAX_LEN = 2 ** 31 - 1
+
 
 def float32_sort_key(x: jax.Array) -> jax.Array:
     """Order-preserving map float32 -> uint32 (IEEE-754 trick, §3.3).
@@ -113,7 +121,7 @@ def _counting_pass(keys_u32: jax.Array, perm: jax.Array, shift: int,
     digits = ((cur >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
     # padded tail sorts to the end: give it digit 255 and rely on the fact
     # that real keys never use the pad slot (we mask below instead).
-    valid = jnp.arange(lp) < m
+    valid = jnp.arange(lp, dtype=jnp.int32) < m
     digits = jnp.where(valid, digits, _NBUCKETS - 1)
     ranks, hist = _digit_ranks_and_hist(digits, chunk=chunk)
     offsets = jnp.cumsum(hist) - hist  # exclusive

@@ -133,7 +133,7 @@ def _phase1_program(
     root = select_root(u, v, n, edge_valid)
     depth_g, _ = bfs(u, v, n, root, edge_mask=edge_valid,
                      engine=bfs_engine)
-    eff = effective_weights(u, v, w, depth_g, n)
+    eff = effective_weights(u, v, w, depth_g, n, edge_valid)
 
     perm_eff = sort_f32_desc_stable(eff, valid=edge_valid)
     rank_eff = (

@@ -29,10 +29,13 @@ def flash_attention_ref(q, k, v, qpos, kpos, *, causal: bool = True,
 def bucket_rank_hist_ref(digits: jax.Array):
     """Stable rank within bucket + histogram, O(L * 256) dense."""
     nb = 256
-    onehot = (digits[:, None] == jnp.arange(nb)[None, :]).astype(jnp.int32)
-    within = jnp.cumsum(onehot, axis=0) - onehot
-    rank = jnp.sum(within * onehot, axis=1)
-    hist = jnp.sum(onehot, axis=0)
+    # dtypes pinned: under x64 a bare arange / unpinned sum would widen
+    # to int64 and diverge from the int32 kernel outputs
+    onehot = (digits[:, None] == jnp.arange(nb, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)
+    within = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - onehot
+    rank = jnp.sum(within * onehot, axis=1, dtype=jnp.int32)
+    hist = jnp.sum(onehot, axis=0, dtype=jnp.int32)
     return rank, hist
 
 

@@ -85,6 +85,7 @@ class CompCost:
     coll_bytes: float = 0.0
     coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
     coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    transfers: int = 0            # host/cross-device transfer ops
     calls: List[Tuple[str, float, bool]] = dataclasses.field(
         default_factory=list)  # (callee, multiplier, fusion_internal)
 
@@ -94,13 +95,24 @@ class CompCost:
 # top-level ops are assumed fused away (the CPU backend fuses less than
 # the TPU backend; counting them would overstate HBM traffic ~10x).
 _HBM_OPS = {
-    "dot", "convolution", "fusion", "gather", "scatter", "scatter-add",
+    "dot", "convolution", "fusion", "gather", "scatter",
     "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
     "sort", "copy", "concatenate", "pad", "all-gather", "all-reduce",
     "reduce-scatter", "all-to-all", "collective-permute",
     "all-gather-start", "all-reduce-start", "cholesky", "triangular-solve",
-    "rng", "iota-large",
+    "rng",
 }
+
+# host↔device / cross-device data movement: each of these is a transfer
+# the serving path must not contain outside its one dispatch boundary.
+_TRANSFER_OPS = {
+    "copy-start", "copy-done", "send", "send-done", "recv", "recv-done",
+    "infeed", "outfeed",
+}
+
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*"
+    r"(may-alias|must-alias)\)")
 
 
 def _split_computations(text: str) -> Dict[str, List[str]]:
@@ -180,15 +192,17 @@ def analyze(text: str) -> Dict:
                     is_coll = ck
                     break
             if is_coll:
-                if is_coll == "reduce-scatter":
-                    nbytes = obytes if obytes else rbytes
-                else:
-                    nbytes = rbytes if is_coll != "all-reduce" else rbytes
+                # reduce-scatter ships the (larger) operand; the rest
+                # are sized by their result
+                nbytes = (obytes or rbytes) if is_coll == "reduce-scatter" \
+                    else rbytes
                 wire = nbytes * _WIRE_MULT[is_coll]
                 cc.coll_bytes += wire
                 cc.coll_by_kind[is_coll] = (
                     cc.coll_by_kind.get(is_coll, 0.0) + wire)
                 cc.coll_counts[is_coll] = cc.coll_counts.get(is_coll, 0) + 1
+            if opcode in _TRANSFER_OPS:
+                cc.transfers += 1
             if opcode not in ("parameter", "constant", "tuple",
                               "get-tuple-element", "bitcast", "while",
                               "conditional", "call"):
@@ -230,7 +244,7 @@ def analyze(text: str) -> Dict:
             return memo[key]
         cc = costs.get(cname)
         if cc is None:
-            return (0.0, 0.0, 0.0, 0.0, {}, {})
+            return (0.0, 0.0, 0.0, 0.0, 0.0, {}, {}, 0)
         fl = cc.flops
         mb = 0.0 if fusion_ctx else cc.mem_bytes
         mu = 0.0 if fusion_ctx else cc.mem_bytes_upper
@@ -238,26 +252,28 @@ def analyze(text: str) -> Dict:
         cb = cc.coll_bytes
         kinds = dict(cc.coll_by_kind)
         counts = dict(cc.coll_counts)
-        memo[key] = (fl, mb, mu, md, cb, kinds, counts)  # cycle guard
+        tr = cc.transfers
+        memo[key] = (fl, mb, mu, md, cb, kinds, counts, tr)  # cycle guard
         for callee, mult, as_fusion in cc.calls:
-            f2, m2, u2, d2, c2, k2, n2 = total(callee,
-                                               fusion_ctx or as_fusion)
+            f2, m2, u2, d2, c2, k2, n2, t2 = total(callee,
+                                                   fusion_ctx or as_fusion)
             fl += f2 * mult
             mb += m2 * mult
             mu += u2 * mult
             md += d2 * mult
             cb += c2 * mult
+            tr += int(t2 * mult)
             for k, v in k2.items():
                 kinds[k] = kinds.get(k, 0.0) + v * mult
             for k, v in n2.items():
                 counts[k] = counts.get(k, 0) + int(v * mult)
-        memo[key] = (fl, mb, mu, md, cb, kinds, counts)
+        memo[key] = (fl, mb, mu, md, cb, kinds, counts, tr)
         return memo[key]
 
     if entry_name is None:
         # fall back: the computation with the most instructions
         entry_name = max(comps, key=lambda c: len(comps[c])) if comps else ""
-    fl, mb, mu, md, cb, kinds, counts = total(entry_name, False)
+    fl, mb, mu, md, cb, kinds, counts, tr = total(entry_name, False)
     return dict(
         flops=fl,
         mem_bytes=mb,
@@ -266,6 +282,69 @@ def analyze(text: str) -> Dict:
         collective_bytes=cb,
         collective_by_kind=kinds,
         collective_counts=counts,
+        transfer_count=tr,
+        output_alias=parse_output_alias(text),
         n_computations=len(comps),
         entry=entry_name,
     )
+
+
+def parse_output_alias(text: str) -> List[Dict]:
+    """Parse the module header's `input_output_alias` map: one entry
+    per donated/aliased buffer, `{output_index}: (param, {...}, kind)`.
+    An empty list on a donated program means donation silently failed
+    (e.g. a shape mismatch made XLA drop the alias)."""
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, min(len(text), i + 100_000)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
+        return []
+    body = text[i + 1:j]
+    out = []
+    for oidx, param, kind in _ALIAS_PAIR_RE.findall(body):
+        out.append(dict(
+            output_index=[int(x) for x in oidx.replace(" ", "").split(",")
+                          if x != ""],
+            parameter=int(param),
+            kind=kind,
+        ))
+    return out
+
+
+def analyze_jitted(fn, *args, static_kwargs: Optional[dict] = None) -> Dict:
+    """Lower + compile any jitted callable over `args` (arrays or
+    `jax.ShapeDtypeStruct`s) and analyze the optimized HLO.
+
+    Accepts either a `jax.jit`-wrapped function (lowered directly, so
+    compile-time properties like `donate_argnums` survive — the
+    `output_alias` report is only meaningful this way) or a plain
+    callable (wrapped in a fresh jit). `static_kwargs` are forwarded at
+    lowering time.
+
+    This replaces the old copy-pasted per-program driver: every
+    call site now funnels through one lowering path, and the report
+    gains `transfer_count` (host/cross-device transfer ops — must be 0
+    for a single-dispatch serving program) and `output_alias` (the
+    donation aliases XLA actually honoured).
+    """
+    import jax
+
+    static_kwargs = static_kwargs or {}
+    if hasattr(fn, "lower"):
+        lowered = fn.lower(*args, **static_kwargs)
+    else:
+        lowered = jax.jit(lambda *a: fn(*a, **static_kwargs)).lower(*args)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    report = analyze(text)
+    report["hlo_chars"] = len(text)
+    return report

@@ -224,6 +224,20 @@ class _StagingPool:
         return bufs
 
 
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One compiled-program signature of the service, in auditable form:
+    the jit callable, abstract argument shapes, and the static kwargs —
+    exactly what `_dispatch` would run for that signature. Consumed by
+    the static auditor (`repro.analysis.jaxpr_audit.audit_service`),
+    which traces fn over args and walks the jaxpr."""
+    name: str
+    signature: Tuple[int, int, int, int]   # (n_bucket, L_bucket, B_pad, b_cap)
+    fn: object                             # the jit-wrapped callable
+    args: tuple                            # jax.ShapeDtypeStruct per array arg
+    static_kwargs: dict
+
+
 @dataclasses.dataclass
 class _PendingChunk:
     """One dispatched chunk awaiting drain: the device output dict plus
@@ -347,6 +361,87 @@ class SparsifyService:
         """
         return _bucket_b_cap(list(budgets) + [default_budget(n_bucket)])
 
+    def _program_kwargs(self, n_bucket: int, L_bucket: int,
+                        b_cap: int) -> dict:
+        """The static kwargs of the compiled program for one dispatch
+        signature — the SINGLE definition `_dispatch`, `warmup` (via
+        `_dispatch`) and the static auditor (`program_specs`) share, so
+        what the auditor proves is exactly what traffic runs."""
+        return dict(
+            n=n_bucket,
+            k_cap=self.k_cap,
+            parallel=self.parallel,
+            lift_levels=None,
+            b_cap=b_cap,
+            use_tree_kernel=False,
+            chunk=32,
+            schedule=self.schedule,
+            p1_chunk=self._p1_chunk(L_bucket),
+            use_euler_lca=True,
+            bfs_engine=self._bfs_engine(n_bucket),
+        )
+
+    @property
+    def dispatch_fn(self):
+        """The ONE jit callable every device chunk dispatches through
+        for this service's mode (donated or plain)."""
+        return (lgrass_device_batched_donated if self.donate
+                else lgrass_device_batched)
+
+    def compiled_signatures(self) -> List[Tuple[int, int, int, int]]:
+        """Every dispatch signature (n_bucket, L_bucket, B_pad, b_cap)
+        this service has compiled — warmed and request-path alike."""
+        return sorted(self._warmed | self._seen)
+
+    def program_specs(
+        self,
+        sizes: Optional[Iterable[Tuple[int, int]]] = None,
+        batch_sizes: Sequence[int] = (1,),
+        budgets: Sequence[int] = (),
+    ) -> List[ProgramSpec]:
+        """`ProgramSpec`s for the compiled-program set, WITHOUT
+        compiling or dispatching anything — pure bucketing math, so the
+        static auditor can cover the warmed signature set off-device.
+
+        sizes=None audits the signatures already compiled
+        (`compiled_signatures`); otherwise (n, L) pairs are resolved
+        through the same bucketing/b_cap/batch-pad policies `warmup`
+        and the request path use.
+        """
+        if sizes is None:
+            sigs = self.compiled_signatures()
+        else:
+            sigset = set()
+            for (n, L) in sizes:
+                n_bucket, L_bucket = self._bucket(n, L)
+                b_cap = self._b_cap(n_bucket, list(budgets))
+                for B in batch_sizes:
+                    sigset.add((n_bucket, L_bucket, self._pad_batch(int(B)),
+                                b_cap))
+            sigs = sorted(sigset)
+        mode = ("donated" if self.donate else
+                "sharded" if self.mesh is not None else "plain")
+        specs = []
+        for sig in sigs:
+            n_bucket, L_bucket, B_pad, b_cap = sig
+            args = (
+                jax.ShapeDtypeStruct((B_pad, L_bucket), jnp.int32),
+                jax.ShapeDtypeStruct((B_pad, L_bucket), jnp.int32),
+                jax.ShapeDtypeStruct((B_pad, L_bucket), jnp.float32),
+                jax.ShapeDtypeStruct((B_pad, L_bucket), jnp.bool_),
+                jax.ShapeDtypeStruct((B_pad,), jnp.int32),
+            )
+            specs.append(ProgramSpec(
+                name=f"lgrass_device_batched[{mode}]"
+                     f"(n={n_bucket},L={L_bucket},B={B_pad},b_cap={b_cap})",
+                signature=sig,
+                fn=self.dispatch_fn,
+                args=args,
+                static_kwargs=self._program_kwargs(n_bucket, L_bucket,
+                                                   b_cap),
+            ))
+        return specs
+
     def _pad_batch(self, n_chunk: int) -> int:
         """Batch-axis pad target for a chunk of `n_chunk` graphs: the
         next power of two, rounded up to whole mesh multiples when
@@ -381,26 +476,14 @@ class SparsifyService:
                 jnp.array(ev), jnp.array(bb))
         if self.mesh is not None:
             arrs = shard_batch_leading(arrs, self.mesh)
-        fn = (lgrass_device_batched_donated if self.donate
-              else lgrass_device_batched)
         with warnings.catch_warnings():
             # only edge_valid/budget can alias a same-shape output; XLA's
             # "donated buffers were not usable" note for u/v/w is expected
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            d = fn(
+            d = self.dispatch_fn(
                 *arrs,
-                n=n_bucket,
-                k_cap=self.k_cap,
-                parallel=self.parallel,
-                lift_levels=None,
-                b_cap=b_cap,
-                use_tree_kernel=False,
-                chunk=32,
-                schedule=self.schedule,
-                p1_chunk=self._p1_chunk(L_bucket),
-                use_euler_lca=True,
-                bfs_engine=self._bfs_engine(n_bucket),
+                **self._program_kwargs(n_bucket, L_bucket, b_cap),
             )
         # re-arm the fence: these outputs ready <=> this dispatch ran and
         # consumed its (async) input transfers => buffers reusable

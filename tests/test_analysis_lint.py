@@ -1,0 +1,209 @@
+"""AST lint rules (`analysis.lint`): per-rule positives and negatives
+on synthetic sources, baseline suppression semantics, and the
+repo-level contract that the live tree is clean modulo the baseline."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (
+    Finding,
+    RULES,
+    apply_baseline,
+    lint_file,
+    load_baseline,
+    run_lint,
+)
+
+
+def _lint_src(tmp_path, source, fname="core/mod.py"):
+    path = tmp_path / fname
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    # relpath keeps the "core/" component so device-path scoping applies
+    return lint_file(str(path), fname)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------------------ ANA001
+
+def test_ana001_flags_mixed_numpy_jnp(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def mixed(x):
+            y = jnp.cumsum(x)
+            return np.asarray(y) + 1
+    """)
+    assert _rules(fs) == ["ANA001"]
+    assert fs[0].symbol == "mixed"
+
+
+def test_ana001_pure_numpy_helper_is_clean(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import numpy as np
+
+        def host_helper(x):
+            return np.asarray(x) + 1
+    """)
+    assert fs == []
+
+
+def test_ana001_name_convention_exempt(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def decode_np(x):
+            return np.asarray(jnp.cumsum(x))
+    """)
+    assert fs == []
+
+
+def test_ana001_not_applied_outside_device_paths(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def mixed(x):
+            return np.asarray(jnp.cumsum(x))
+    """, fname="train/mod.py")
+    assert fs == []
+
+
+# ------------------------------------------------------------------ ANA002
+
+def test_ana002_flags_unpinned_zeros(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import jax.numpy as jnp
+
+        def f(n):
+            return jnp.zeros((n,))
+    """)
+    assert _rules(fs) == ["ANA002"]
+
+
+def test_ana002_accepts_positional_and_keyword_dtype(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import jax.numpy as jnp
+
+        def f(n):
+            a = jnp.zeros((n,), jnp.int32)
+            b = jnp.ones((n,), dtype=jnp.float32)
+            c = jnp.full((n,), -1, jnp.int32)
+            return a, b, c
+    """)
+    assert fs == []
+
+
+def test_ana002_full_literal_fill_flags_name_fill_passes(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import jax.numpy as jnp
+
+        INF = jnp.float32(3e38)
+
+        def f(n):
+            bad = jnp.full((n,), 0)
+            ok = jnp.full((n,), INF)
+            return bad, ok
+    """)
+    assert _rules(fs) == ["ANA002"]
+
+
+# ------------------------------------------------------------------ ANA003
+
+def test_ana003_flags_host_sync(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import jax
+
+        def decode(x):
+            return jax.device_get(x)
+    """)
+    assert _rules(fs) == ["ANA003"]
+
+
+def test_ana003_flags_block_until_ready(tmp_path):
+    fs = _lint_src(tmp_path, """
+        def wait(x):
+            return x.block_until_ready()
+    """, fname="serve/mod.py")
+    assert _rules(fs) == ["ANA003"]
+
+
+# ------------------------------------------------------------------ ANA004
+
+def test_ana004_flags_missing_mask(tmp_path):
+    fs = _lint_src(tmp_path, """
+        def sparsify(u, v, w, n):
+            return u
+    """)
+    assert _rules(fs) == ["ANA004"]
+    assert fs[0].symbol == "sparsify"
+
+
+def test_ana004_mask_param_and_private_pass(tmp_path):
+    fs = _lint_src(tmp_path, """
+        def sparsify(u, v, w, n, edge_valid):
+            return u
+
+        def _internal(u, v, w, n):
+            return u
+
+        def oracle_numpy(u, v, w, n):
+            return u
+    """)
+    assert fs == []
+
+
+# ------------------------------------------------------------------ ANA005
+
+def test_ana005_flags_callbacks(tmp_path):
+    fs = _lint_src(tmp_path, """
+        import jax
+
+        def f(x):
+            jax.debug.print("x={}", x)
+            return jax.pure_callback(lambda a: a, x, x)
+    """)
+    assert sorted(_rules(fs)) == ["ANA005", "ANA005"]
+
+
+# ---------------------------------------------------------------- baseline
+
+def test_baseline_suppression_by_symbol_and_wildcard():
+    f1 = Finding("ANA003", "src/repro/core/x.py", 10, "decode", "m")
+    f2 = Finding("ANA003", "src/repro/core/x.py", 20, "other", "m")
+    f3 = Finding("ANA001", "src/repro/core/x.py", 30, "decode", "m")
+    base = [{"rule": "ANA003", "path": "src/repro/core/x.py",
+             "symbol": "decode", "reason": "r"}]
+    new, sup = apply_baseline([f1, f2, f3], base)
+    assert sup == [f1] and new == [f2, f3]
+    wild = [{"rule": "ANA003", "path": "src/repro/core/x.py",
+             "symbol": "*", "reason": "r"}]
+    new, sup = apply_baseline([f1, f2, f3], wild)
+    assert new == [f3] and len(sup) == 2
+
+
+def test_shipped_baseline_entries_all_documented():
+    for entry in load_baseline():
+        assert entry["rule"] in RULES
+        assert entry.get("reason"), f"baseline entry without reason: {entry}"
+
+
+def test_repo_tree_clean_modulo_baseline():
+    """THE contract tier1-static enforces: the live source tree has no
+    findings beyond the reviewed baseline."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    cwd = os.getcwd()
+    os.chdir(root)
+    try:
+        findings = run_lint(["src/repro"])
+        new, _ = apply_baseline(findings, load_baseline())
+    finally:
+        os.chdir(cwd)
+    assert new == [], "\n".join(f.format() for f in new)

@@ -1,0 +1,196 @@
+"""Interval range propagator (`analysis.ranges`): the machine-checked
+side of every "fits int32" comment in the pipeline. Covers interval
+arithmetic with sentinels, the packed-key bound derivation against the
+runtime constants, per-op overflow localization on synthetic jaxprs,
+and the PR 5 unclamped-INF-depth regression caught statically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.ranges import (
+    INT32_MAX,
+    Interval,
+    check_ranges,
+    derive_euler_pack_max_n,
+    derive_packed_key_max_n,
+    euler_pack_interval,
+    packed_key_interval,
+)
+from repro.core.bfs import EULER_PACK_MAX_N, PACKED_KEY_MAX_N, packed_key_bound
+
+I32 = jax.ShapeDtypeStruct((8,), jnp.int32)
+F32 = jax.ShapeDtypeStruct((8,), jnp.float32)
+SCALAR = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+# ---------------------------------------------------------------- intervals
+
+def test_interval_arithmetic():
+    a = Interval.of(0, 10)
+    b = Interval.of(-3, 4)
+    assert (a + b).lo == -3 and (a + b).hi == 14
+    assert (a - b).lo == -4 and (a - b).hi == 13
+    assert (a * b).lo == -30 and (a * b).hi == 40
+    assert a.neg().lo == -10 and a.neg().hi == 0
+    assert a.min_(b).hi == 4 and a.max_(b).lo == 0
+
+
+def test_interval_sentinel_semantics():
+    depth = Interval.of(0, 63, sentinel=INT32_MAX)
+    assert depth.taints_float()
+    assert not depth.fits(jnp.int16)       # sentinel is part of the hull
+    assert depth.fits(jnp.int32)
+    stripped = Interval(depth.lo, depth.hi)
+    assert not stripped.taints_float()
+    assert stripped.fits(jnp.int16)
+
+
+def test_interval_top_never_flags():
+    top = Interval.top()
+    assert top.fits(jnp.int8)
+    assert (top + Interval.of(0, 5)).unknown
+    assert not top.taints_float()
+
+
+def test_union_keeps_single_sentinel_folds_two():
+    a = Interval.of(0, 3, sentinel=INT32_MAX)
+    b = Interval.of(5, 9)
+    u = a.union(b)
+    assert u.sentinel == INT32_MAX and u.lo == 0 and u.hi == 9
+    c = Interval.of(0, 3, sentinel=7)
+    d = Interval.of(0, 3, sentinel=11)
+    folded = c.union(d)
+    assert folded.sentinel is None and folded.hi == 11
+
+
+# ------------------------------------------------------- derived constants
+
+def test_packed_key_bound_matches_interval_model():
+    for n in (1, 2, 64, 46339):
+        assert packed_key_interval(n).hi == packed_key_bound(n)
+
+
+def test_derived_packed_key_max_n_equals_runtime_constant():
+    assert derive_packed_key_max_n() == PACKED_KEY_MAX_N
+    assert packed_key_bound(PACKED_KEY_MAX_N) <= INT32_MAX
+    assert packed_key_bound(PACKED_KEY_MAX_N + 1) > INT32_MAX
+
+
+def test_derived_euler_pack_max_n_equals_runtime_constant():
+    assert derive_euler_pack_max_n() == EULER_PACK_MAX_N
+    assert euler_pack_interval(EULER_PACK_MAX_N).fits(jnp.uint32)
+
+
+# -------------------------------------------------- synthetic jaxpr checks
+
+def test_flags_exactly_the_overflowing_op():
+    """dist·(n+1) fits int32 one past the switch; the +id does not —
+    the finding must localize to the add, not the mul."""
+    n = PACKED_KEY_MAX_N + 1
+
+    def pack(dist, ids, base):
+        return dist * base + ids
+
+    findings = check_ranges(
+        pack,
+        [Interval.of(0, n), Interval.of(0, n), Interval.const(n + 1)],
+        I32, I32, SCALAR)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.kind == "int-overflow" and f.primitive == "add"
+
+
+def test_clean_at_the_switch_point():
+    n = PACKED_KEY_MAX_N
+
+    def pack(dist, ids, base):
+        return dist * base + ids
+
+    assert check_ranges(
+        pack,
+        [Interval.of(0, n), Interval.of(0, n), Interval.const(n + 1)],
+        I32, I32, SCALAR) == []
+
+
+def test_mul_overflow_flags_the_mul():
+    def f(x, y):
+        return x * y
+
+    findings = check_ranges(
+        f, [Interval.of(0, 2 ** 16), Interval.of(0, 2 ** 16)], I32, I32)
+    assert [x.primitive for x in findings] == ["mul"]
+
+
+def test_cast_overflow():
+    def f(x):
+        return x.astype(jnp.int16)
+
+    findings = check_ranges(f, [Interval.of(0, 100_000)], I32)
+    assert [x.kind for x in findings] == ["cast-overflow"]
+    assert check_ranges(f, [Interval.of(0, 1000)], I32) == []
+
+
+def test_unknown_seed_never_flags():
+    def f(x, y):
+        return (x * y + x).astype(jnp.int8)
+
+    assert check_ranges(f, [Interval.top(), Interval.top()], I32, I32) == []
+
+
+def test_reduce_sum_overflow():
+    def f(x):
+        # dtype pinned so the x64 CI leg doesn't widen the accumulator
+        return jnp.sum(x, dtype=jnp.int32)
+
+    big = Interval.of(0, INT32_MAX // 2)
+    findings = check_ranges(f, [big], I32)
+    assert any(x.kind == "int-overflow" for x in findings)
+    assert check_ranges(f, [Interval.of(0, 3)], I32) == []
+
+
+# ----------------------------------------------------- the PR 5 regression
+
+def test_pr5_unclamped_inf_depth_flags():
+    """The shipped bug: unreachable-depth sentinel multiplied into the
+    effective weight without a guard — poisoning every downstream sort
+    with INF. Statically: sentinel-escape at the float cast."""
+
+    def buggy_eff(depth, w):
+        return depth.astype(jnp.float32) * w
+
+    findings = check_ranges(
+        buggy_eff, [Interval.of(0, 63, sentinel=INT32_MAX),
+                    Interval.of(0, 1)], I32, F32)
+    assert [x.kind for x in findings] == ["sentinel-escape"]
+
+
+def test_pr5_guarded_depth_is_clean():
+    """The fix idiom (`bfs.finite_depth`): jnp.where(d == INF, 0, d)
+    strips the sentinel — select refinement must prove the cast safe."""
+
+    def clean_eff(depth, w):
+        safe = jnp.where(depth == INT32_MAX, 0, depth)
+        return safe.astype(jnp.float32) * w
+
+    assert check_ranges(
+        clean_eff, [Interval.of(0, 63, sentinel=INT32_MAX),
+                    Interval.of(0, 1)], I32, F32) == []
+
+
+def test_effective_weights_witness_is_clean():
+    """The real `core.bfs.effective_weights` guard, traced end-to-end
+    with sentinel-bearing depth seeds."""
+    from repro.core.bfs import effective_weights
+
+    L, n = 8, 64
+    findings = check_ranges(
+        effective_weights,
+        [Interval.of(0, n - 1), Interval.of(0, n - 1), Interval.of(0, 1),
+         Interval.of(0, n - 1, sentinel=INT32_MAX)],
+        jax.ShapeDtypeStruct((L,), jnp.int32),
+        jax.ShapeDtypeStruct((L,), jnp.int32),
+        jax.ShapeDtypeStruct((L,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        static_kwargs=dict(n=n))
+    assert findings == []

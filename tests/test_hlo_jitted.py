@@ -1,0 +1,76 @@
+"""`hlo_analysis.analyze_jitted`: one lowering path for any jitted
+callable, plus the transfer/alias report the jaxpr auditor consumes.
+Donation must be verified on the COMPILED artifact — `donate_argnums`
+the compiler silently drops never shows up in a jaxpr."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, analyze_jitted, parse_output_alias
+
+F = jax.ShapeDtypeStruct((256,), jnp.float32)
+
+
+def test_analyze_jitted_plain_callable():
+    report = analyze_jitted(lambda x, y: x @ y,
+                            jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                            jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    assert report["flops"] >= 2 * 32 * 32 * 32
+    assert report["transfer_count"] == 0
+    assert report["output_alias"] == []
+
+
+def test_analyze_jitted_prejitted_with_statics():
+    @jax.jit
+    def f(x, scale=2.0):
+        return x * scale
+
+    report = analyze_jitted(f, F, static_kwargs=dict(scale=3.0))
+    assert report["transfer_count"] == 0
+    assert report["n_computations"] >= 1
+
+
+def test_donated_program_reports_alias():
+    g = jax.jit(lambda x, y: x * 2 + y, donate_argnums=(0,))
+    report = analyze_jitted(g, F, F)
+    assert len(report["output_alias"]) == 1
+    alias = report["output_alias"][0]
+    assert alias["parameter"] == 0
+    assert alias["kind"] in ("may-alias", "must-alias")
+    # wrapping the same fn in a fresh jit drops the donation
+    plain = analyze_jitted(lambda x, y: x * 2 + y, F, F)
+    assert plain["output_alias"] == []
+
+
+def test_service_donated_dispatch_aliases_buffers():
+    from repro.serve.sparsify_service import SparsifyService
+
+    svc = SparsifyService(donate=True)
+    spec = svc.program_specs([(64, 128)], batch_sizes=(2,))[0]
+    assert spec.name.startswith("lgrass_device_batched[donated]")
+    report = analyze_jitted(spec.fn, *spec.args,
+                            static_kwargs=spec.static_kwargs)
+    assert report["transfer_count"] == 0
+    assert len(report["output_alias"]) >= 1
+
+
+def test_parse_output_alias_tuple_indices():
+    header = ("HloModule jit_f, input_output_alias="
+              "{ {0}: (3, {}, must-alias), {1, 2}: (4, {}, may-alias) }, "
+              "entry_computation_layout={()->f32[8]{0}}")
+    aliases = parse_output_alias(header)
+    assert aliases == [
+        dict(output_index=[0], parameter=3, kind="must-alias"),
+        dict(output_index=[1, 2], parameter=4, kind="may-alias"),
+    ]
+    assert parse_output_alias("HloModule jit_f") == []
+
+
+def test_analyze_text_keys_are_stable():
+    g = jax.jit(lambda x: jnp.sort(x))
+    text = g.lower(F).compile().as_text()
+    report = analyze(text)
+    for key in ("flops", "mem_bytes", "collective_bytes",
+                "transfer_count", "output_alias", "entry"):
+        assert key in report
